@@ -1,0 +1,36 @@
+"""Paper Fig. 6: distributed scalability, 64 -> 512 chips.
+
+Roofline-model time per likelihood iteration on TPU v5e meshes (the CPU
+container cannot time 512 chips; the model uses the same constants as
+EXPERIMENTS.md §Roofline).  DP(100%) vs the mixed-precision band: the MP
+speedup comes from bf16 off-band MXU throughput + halved off-band bytes,
+exactly the mechanism the paper measures with fp64/fp32 on Shaheen-II."""
+
+from repro.launch.costmodel import geostat_cell_cost
+from repro.launch.mesh import HBM_BW, ICI_LINK_BW, PEAK_BF16_FLOPS
+
+from .common import emit
+
+
+def model_time(cost, chips):
+    t_comp = cost.flops / chips / PEAK_BF16_FLOPS
+    t_mem = cost.hbm_bytes / chips / HBM_BW
+    t_coll = cost.collective_bytes_per_chip / ICI_LINK_BW
+    return max(t_comp, t_mem, t_coll), (t_comp, t_mem, t_coll)
+
+
+def run(n=524_288, nb=8192):
+    for chips in (64, 128, 256, 512):
+        mp = geostat_cell_cost(n, nb, diag_thick=8, chips=chips)
+        # DP(100%): every tile fp32 (6x MXU cost), full fp32 bytes
+        dp = geostat_cell_cost(n, nb, diag_thick=n // nb, chips=chips)
+        t_mp, terms = model_time(mp, chips)
+        t_dp, _ = model_time(dp, chips)
+        emit(f"fig6/chips{chips}", t_mp * 1e6,
+             f"dp_time={t_dp:.2f}s mp_time={t_mp:.2f}s "
+             f"speedup={t_dp/t_mp:.2f}x terms=c{terms[0]:.2f}/m{terms[1]:.2f}"
+             f"/n{terms[2]:.2f}s")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Paper Fig. 8: Prediction MSE (k-fold CV) boxplots per variant.
+
+MP variants should match DP's PMSE at every correlation level while DST
+degrades unless ~90% of tiles are dense (the paper's central prediction
+claim)."""
+
+import jax
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import PrecisionPolicy, kfold_pmse, krige, pmse
+from repro.covariance import CORRELATION_LEVELS, make_dataset
+
+from .common import emit
+
+N = 256
+NB = 32
+K = 4
+
+
+def dst_pmse(ds, diag_thick, k=K, seed=0):
+    """DST prediction: kriging through the block-diagonal covariance ==
+    kriging with only the super-block containing each target."""
+    n = ds.locs.shape[0]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    fold = n // k
+    super_nb = diag_thick * NB
+    pol = PrecisionPolicy.full(jnp.float32)
+    scores = []
+    for f in range(k):
+        test = perm[f * fold:(f + 1) * fold]
+        train = np.setdiff1d(perm, test)[: (n - fold) // NB * NB]
+        preds = np.zeros(len(test))
+        # each test point predicted from its own block only
+        for s in range(0, len(train), super_nb):
+            blk = train[s:s + super_nb]
+            if len(blk) < NB:
+                continue
+            blk = blk[: len(blk) // NB * NB]
+            mu = krige(ds.locs[blk], ds.z[blk], ds.locs[test], ds.theta0,
+                       pol, nb=NB, nu_static=0.5)
+            # nearest-block assignment: weight by max cross-covariance
+            d = np.linalg.norm(np.asarray(ds.locs[test])[:, None]
+                               - np.asarray(ds.locs[blk])[None], axis=-1)
+            preds = np.where(d.min(1) < (np.abs(preds) * 0 + 0.08),
+                             np.asarray(mu), preds)
+        scores.append(float(np.mean((preds - np.asarray(ds.z[test])) ** 2)))
+    return float(np.mean(scores))
+
+
+def run():
+    p = N // NB
+    out = {}
+    for level, theta0 in CORRELATION_LEVELS.items():
+        ds = make_dataset(jax.random.PRNGKey(11), N, theta0, nu_static=0.5)
+        for vname, pol in [
+            ("DP", PrecisionPolicy.full(jnp.float32)),
+            ("DP10-SP90", PrecisionPolicy.from_dp_percent(p, 0.10)),
+            ("DP40-SP60", PrecisionPolicy.from_dp_percent(p, 0.40)),
+        ]:
+            score, _ = kfold_pmse(ds.locs, ds.z, theta0, pol, k=K, nb=NB,
+                                  nu_static=0.5)
+            out[f"{level}/{vname}"] = score
+            emit(f"fig8/{level}/{vname}", 0.0, f"pmse={score:.4f}")
+        d70 = dst_pmse(ds, PrecisionPolicy.from_dp_percent(p, 0.70).diag_thick)
+        out[f"{level}/DST-DP70"] = d70
+        emit(f"fig8/{level}/DST-DP70", 0.0, f"pmse={d70:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

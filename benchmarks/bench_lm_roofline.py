@@ -1,0 +1,67 @@
+"""LM roofline table: all (arch x shape) cells on the production meshes.
+
+Primary terms come from the analytic cost model (always available); when
+the dry-run sweep has produced results/dryrun/*.json, the compiled-module
+numbers (peak memory, collective parse, compile time) are merged in."""
+
+import glob
+import json
+import os
+
+from repro.configs import ALL_ARCHS, SHAPES, cell_applicable
+from repro.launch.costmodel import lm_cell_cost
+from repro.launch.mesh import HBM_BW, ICI_LINK_BW, PEAK_BF16_FLOPS
+
+from .common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_dryrun(arch, shape, mesh):
+    path = os.path.join(DRYRUN_DIR, f"{arch}__{shape}__{mesh}.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return None
+
+
+def run(mesh="single"):
+    chips = 256 if mesh == "single" else 512
+    mesh_axes = ({"data": 16, "model": 16} if mesh == "single"
+                 else {"pod": 2, "data": 16, "model": 16})
+    rows = []
+    for arch, cfg in ALL_ARCHS.items():
+        for sname, shape in SHAPES.items():
+            ok, why = cell_applicable(cfg, shape)
+            if not ok:
+                emit(f"roofline/{arch}/{sname}/{mesh}", 0.0, "SKIP:" + why[:40])
+                continue
+            from repro.launch.dryrun import TRAIN_OVERRIDES, arch_for_cell
+            mb = (TRAIN_OVERRIDES.get(arch, {}).get("microbatches", 1)
+                  if shape.kind == "train" else 1)
+            cc = lm_cell_cost(arch_for_cell(arch), shape, chips=chips,
+                              mesh_axes=mesh_axes, microbatches=mb)
+            t_c = cc.flops / chips / PEAK_BF16_FLOPS
+            t_m = cc.hbm_bytes / chips / HBM_BW
+            t_n = cc.collective_bytes_per_chip / ICI_LINK_BW
+            bound = max(t_c, t_m, t_n)
+            useful = (cc.model_flops / chips) / PEAK_BF16_FLOPS
+            dr = load_dryrun(arch, sname, mesh)
+            extra = ""
+            if dr:
+                peak = dr["extras"]["peak_bytes_per_chip"] / 2 ** 30
+                extra = (f" peak={peak:.1f}GiB fits="
+                         f"{dr['extras']['fits_hbm']} "
+                         f"compile={dr['extras']['compile_s']}s")
+            emit(f"roofline/{arch}/{sname}/{mesh}", bound * 1e6,
+                 f"tc={t_c*1e3:.1f}ms tm={t_m*1e3:.1f}ms tn={t_n*1e3:.1f}ms "
+                 f"bneck={'cmn'[int(np.argmax([t_c, t_m, t_n]))]} "
+                 f"roofline_frac={useful/bound:.3f}{extra}")
+            rows.append((arch, sname, t_c, t_m, t_n, useful / bound))
+    return rows
+
+
+import numpy as np  # noqa: E402
+
+if __name__ == "__main__":
+    run()

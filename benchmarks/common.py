@@ -1,0 +1,22 @@
+"""Shared benchmark utilities."""
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_call(fn, *args, warmup=1, iters=3):
+    """Median wall-clock microseconds per call of a jitted fn."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

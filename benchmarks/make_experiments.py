@@ -1,0 +1,79 @@
+"""Generate the EXPERIMENTS.md §Dry-run + §Roofline tables from
+results/dryrun/*.json.  Run after `python -m repro.launch.dryrun --all`.
+
+  PYTHONPATH=src:. python -m benchmarks.make_experiments > results/tables.md
+"""
+
+import glob
+import json
+import os
+import sys
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+PERF_DIR = os.environ.get("PERF_DIR", "results/perf")
+
+
+def load_all():
+    cells = {}
+    for d_ in (DRYRUN_DIR, PERF_DIR):
+        for path in sorted(glob.glob(os.path.join(d_, "*.json"))):
+            with open(path) as f:
+                d = json.load(f)
+            base = os.path.basename(path)[:-5]
+            cells[base] = d
+    return cells
+
+
+def fmt_t(sec):
+    return f"{sec*1e3:.1f}" if sec < 10 else f"{sec*1e3:.0f}"
+
+
+def roofline_table(cells, mesh="single", variants=False):
+    print(f"\n### Roofline — {mesh}-pod "
+          f"({'variants' if variants else 'baselines'})\n")
+    print("| cell | t_compute (ms) | t_memory (ms) | t_collective (ms) |"
+          " bottleneck | useful/HLO | roofline frac | peak GiB | fits |"
+          " compile s |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for name, d in sorted(cells.items()):
+        parts = name.split("__")
+        if len(parts) != 3:
+            continue
+        arch, shape, meshv = parts
+        is_variant = "+" in meshv
+        if not meshv.startswith(mesh) or is_variant != variants:
+            continue
+        ex = d["extras"]
+        print(f"| {arch}:{shape}{meshv[len(mesh):]} | {fmt_t(d['t_compute'])} "
+              f"| {fmt_t(d['t_memory'])} | {fmt_t(d['t_collective'])} "
+              f"| {d['bottleneck']} | {d['useful_flops_fraction']:.2f} "
+              f"| {d['roofline_fraction']:.3f} "
+              f"| {ex['peak_bytes_per_chip']/2**30:.1f} "
+              f"| {'Y' if ex['fits_hbm'] else 'N'} "
+              f"| {ex['compile_s']:.0f} |")
+
+
+def dryrun_summary(cells):
+    n_single = sum(1 for k in cells if k.endswith("__single"))
+    n_multi = sum(1 for k in cells if k.endswith("__multi"))
+    fits = sum(1 for d in cells.values() if d["extras"]["fits_hbm"])
+    print(f"\nCompiled cells: {n_single} single-pod + {n_multi} multi-pod; "
+          f"{fits}/{len(cells)} within the 16 GiB/chip estimate "
+          f"(CPU-backend f32-inflated; see Methodology).")
+    worst = sorted(((d["roofline_fraction"], k) for k, d in cells.items()
+                    if k.endswith("__single")))
+    if worst:
+        print(f"\nWorst roofline fractions (hillclimb candidates): "
+              f"{[(k, round(f, 3)) for f, k in worst[:4]]}")
+
+
+def main():
+    cells = load_all()
+    dryrun_summary(cells)
+    roofline_table(cells, "single")
+    roofline_table(cells, "multi")
+    roofline_table(cells, "single", variants=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: one module per paper figure/table + framework extras.
+
+  fig4   shared-memory time per likelihood iteration (fp64 vs fp64/fp32)
+  fig5   data-movement / storage bytes, DP vs mixed precision
+  fig6   distributed scalability 64 -> 512 chips (roofline model)
+  fig7   Monte-Carlo parameter-estimation accuracy
+  fig8   k-fold PMSE per precision variant
+  table1 wind-speed (WRF-like) regions: estimation + PMSE
+  lm     40-cell (arch x shape) roofline table
+  kernels Pallas kernel correctness/footprint summary
+
+Run a subset: python -m benchmarks.run fig4 fig7
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_fig4_shared_memory, bench_fig5_data_movement,
+                   bench_fig6_scalability, bench_fig7_estimation,
+                   bench_fig8_pmse, bench_kernels, bench_lm_roofline,
+                   bench_table1_real)
+
+    suites = {
+        "fig4": bench_fig4_shared_memory.run,
+        "fig5": bench_fig5_data_movement.run,
+        "fig6": bench_fig6_scalability.run,
+        "fig7": bench_fig7_estimation.run,
+        "fig8": bench_fig8_pmse.run,
+        "table1": bench_table1_real.run,
+        "lm": bench_lm_roofline.run,
+        "kernels": bench_kernels.run,
+    }
+    wanted = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in wanted:
+        try:
+            suites[name]()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED suites: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

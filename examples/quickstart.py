@@ -1,0 +1,38 @@
+"""Quickstart: fit a Matern field with the mixed-precision tile Cholesky
+and predict held-out values -- the paper's pipeline in ~30 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PrecisionPolicy, fit_mle, krige, make_loglik, pmse
+from repro.covariance import make_dataset
+
+N, NB = 256, 32
+
+# 1. synthetic Matern field (medium correlation), Morton-ordered locations
+ds = make_dataset(jax.random.PRNGKey(0), N, theta0=[1.0, 0.1, 0.5],
+                  nu_static=0.5, ordering="morton")
+# hold out every 8th point (spatially interleaved test set)
+new = np.arange(7, N, 8)
+obs = np.setdiff1d(np.arange(N), new)[:224]
+
+# 2. maximum-likelihood fit with the paper's mixed-precision factorization
+#    (hi=fp32 band around the diagonal, lo=bf16 off-band -- the TPU pair)
+policy = PrecisionPolicy.tpu(diag_thick=2)
+loglik = make_loglik(ds.locs[obs], ds.z[obs], policy, nb=NB, nu_static=0.5)
+res = fit_mle(lambda th: loglik(jnp.concatenate([th, jnp.array([0.5])])),
+              theta0=[0.7, 0.15], max_iters=60)
+print(f"theta_hat = ({res.theta[0]:.3f}, {res.theta[1]:.4f})  "
+      f"true = (1.0, 0.1)   loglik = {res.loglik:.2f}  "
+      f"[{res.n_evals} evaluations]")
+
+# 3. kriging prediction at unseen locations through the same factorization
+theta_hat = jnp.array([res.theta[0], res.theta[1], 0.5])
+mu, var = krige(ds.locs[obs], ds.z[obs], ds.locs[new], theta_hat, policy,
+                nb=NB, nu_static=0.5, return_var=True)
+print(f"prediction MSE = {float(pmse(mu, ds.z[new])):.4f}  "
+      f"(mean kriging var = {float(var.mean()):.4f})")

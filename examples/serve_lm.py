@@ -1,0 +1,73 @@
+"""Serving example: prefill a prompt, then batched greedy decode -- with
+the paper-inspired banded-precision KV option compared against exact.
+
+  PYTHONPATH=src python examples/serve_lm.py --tokens 24
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models.decode import decode_step, prefill
+from repro.models.transformer import init_lm
+from repro.kernels.mp_attention.ops import (banded_decode_attention,
+                                            quantize_kv)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--tokens", type=int, default=16)
+ap.add_argument("--prompt-len", type=int, default=32)
+ap.add_argument("--batch", type=int, default=2)
+args = ap.parse_args()
+
+cfg = ArchConfig(name="serve-demo", family="dense", n_layers=4, d_model=128,
+                 n_heads=8, n_kv_heads=4, d_head=16, d_ff=512, vocab=1024,
+                 remat=False)
+params, _ = init_lm(jax.random.PRNGKey(0), cfg)
+
+prompt = jax.random.randint(jax.random.PRNGKey(1),
+                            (args.batch, args.prompt_len), 0, cfg.vocab)
+logits, cache = prefill(params, prompt, cfg)
+
+# grow the cache for generation
+grow = args.tokens
+cache = jax.tree.map(
+    lambda x: jnp.pad(x, [(0, 0), (0, 0), (0, grow)] + [(0, 0)] * (x.ndim - 3))
+    if x.ndim == 5 else x, cache)
+
+step = jax.jit(lambda c, t, p: decode_step(params, c, t, p, cfg))
+tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+out = [tok]
+for i in range(args.tokens - 1):
+    logits, cache = step(cache, tok, jnp.int32(args.prompt_len + i))
+    tok = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
+    out.append(tok)
+gen = jnp.concatenate(out, axis=1)
+print("generated token ids:")
+for b in range(args.batch):
+    print(f"  seq{b}: {np.asarray(gen[b]).tolist()}")
+
+# --- banded-precision KV attention demo (paper technique -> serving) ----
+print("\nbanded-precision KV (near bf16 window + far int8 blocks):")
+b, g, d, sn, sf = 2, 4, 64, 128, 256
+ks = jax.random.split(jax.random.PRNGKey(2), 5)
+q = jax.random.normal(ks[0], (b, g, d))
+kn, vn = (jax.random.normal(k, (b, sn, d)) for k in ks[1:3])
+kf, vf = (jax.random.normal(k, (b, sf, d)) for k in ks[3:5])
+kq, vq, scales = quantize_kv(kf, vf)
+near_len = jnp.full((b,), sn, jnp.int32)
+far_len = jnp.full((b,), sf, jnp.int32)
+out_mp = banded_decode_attention(q, kn, vn, near_len, kq, vq, scales,
+                                 far_len, sm_scale=d ** -0.5)
+# exact reference
+k_all = jnp.concatenate([kn, kf], 1)
+v_all = jnp.concatenate([vn, vf], 1)
+p_ = jax.nn.softmax(jnp.einsum("bgd,bsd->bgs", q, k_all) * d ** -0.5, -1)
+exact = jnp.einsum("bgs,bsd->bgd", p_, v_all)
+err = float(jnp.max(jnp.abs(out_mp - exact)))
+saved = 1 - (sn * 2 + sf * 1) / ((sn + sf) * 2)
+print(f"  max error vs exact attention: {err:.2e}")
+print(f"  far-segment cache bytes saved: {saved:.0%} "
+      f"(decode is HBM-bound -> direct step-time win)")

@@ -1,0 +1,116 @@
+"""Sharded checkpointing with resharding restore and async saves.
+
+Layout: <dir>/step_<N>/
+  manifest.json   -- tree structure, shapes, dtypes, step
+  arrays.npz      -- flattened leaves keyed by tree path
+
+Design points for 1000+ nodes (DESIGN.md §5):
+  * save() snapshots device arrays to host then writes on a background
+    thread -- the train loop never blocks on the filesystem;
+  * restore(..., shardings=...) device_puts each leaf with the TARGET
+    sharding, so a checkpoint written on one mesh restores onto another
+    (elastic scaling / failover to a different slice topology);
+  * latest_step() + atomic rename give crash-consistent resume;
+  * in a true multi-host deployment each host would write its local
+    shards (jax.experimental.multihost_utils); single-process here, the
+    layout and restore-with-resharding semantics are what we validate.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_EXECUTOR = ThreadPoolExecutor(max_workers=1)
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(ckpt_dir: str, step: int, state, *, async_: bool = True) -> Future:
+    """Snapshot `state` and write step_<N> atomically. Returns a Future."""
+    flat, _ = _flatten_with_paths(state)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    # bf16 is not a numpy-native dtype: store via uint16 view + dtype tag
+    meta = {}
+    arrays = {}
+    for k, v in host.items():
+        if v.dtype == jnp.bfloat16:
+            arrays[k] = v.view(np.uint16)
+            meta[k] = "bfloat16"
+        else:
+            arrays[k] = v
+            meta[k] = str(v.dtype)
+
+    def write():
+        tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "dtypes": meta,
+                       "keys": sorted(arrays.keys())}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        return final
+
+    if async_:
+        return _EXECUTOR.submit(write)
+    fut: Future = Future()
+    fut.set_result(write())
+    return fut
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, state_like, *, shardings=None):
+    """Load step_<N> into the structure of `state_like`.
+
+    shardings: optional pytree of jax.sharding.Sharding (same structure) --
+    each leaf is device_put with its target sharding, implementing
+    restore-onto-a-different-mesh (elastic scaling)."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_like, treedef = _flatten_with_paths(state_like)
+    shard_flat = None
+    if shardings is not None:
+        shard_flat, _ = _flatten_with_paths(shardings)
+
+    restored = {}
+    for key, like in flat_like.items():
+        arr = data[key]
+        if manifest["dtypes"][key] == "bfloat16":
+            arr = arr.view(np.dtype("uint16"))
+            arr = jax.numpy.asarray(arr).view(jnp.bfloat16)
+        else:
+            arr = jnp.asarray(arr)
+        if shard_flat is not None:
+            arr = jax.device_put(arr, shard_flat[key])
+        restored[key] = arr
+
+    # flat_like preserves canonical tree_flatten order -> safe to unflatten
+    leaves = [restored[k] for k in flat_like.keys()]
+    return jax.tree_util.tree_unflatten(treedef, leaves)

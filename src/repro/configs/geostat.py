@@ -1,0 +1,24 @@
+"""The paper's own workload: mixed-precision tile Cholesky MLE.
+
+Production cells (dry-run rows alongside the 40 LM cells):
+  geostat_500k : n=524288, nb=8192 (p=64 panels), band t=8 -> DP(~22%)
+  geostat_1m   : n=1048576 (multi-pod), nb=16384 (p=64), band t=8
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class GeostatConfig:
+    name: str
+    n: int
+    nb: int
+    diag_thick: int
+    nu: float = 0.5
+    off_update: str = "square"
+
+
+GEOSTAT_CONFIGS = {
+    "geostat_500k": GeostatConfig("geostat_500k", 524_288, 8_192, 8),
+    "geostat_1m": GeostatConfig("geostat_1m", 1_048_576, 16_384, 8),
+    "geostat_smoke": GeostatConfig("geostat_smoke", 512, 64, 2),
+}

@@ -1,0 +1,84 @@
+"""Assigned input shapes and per-(arch x shape) input specs.
+
+LM transformer shapes are seq_len x global_batch.  decode_*/long_* lower
+`serve_step` (one new token against a KV cache of seq_len), NOT train_step.
+long_500k requires sub-quadratic attention: run for ssm/hybrid/SWA archs,
+skip for pure full-attention archs (recorded in DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def cell_applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) for one (arch x shape) cell."""
+    if shape.name == "long_500k" and not cfg.attention_is_subquadratic:
+        return False, ("pure full-attention arch: 524288-token dense KV "
+                       "decode is the quadratic regime this shape excludes "
+                       "(DESIGN.md §4)")
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train  -> batch dict for train_step
+    prefill-> (tokens, [frames|patches]) for the prefill lowering
+    decode -> (cache, tokens, pos) for the decode lowering
+    No device memory is allocated.
+    """
+    s = jax.ShapeDtypeStruct
+    b, sl = shape.global_batch, shape.seq_len
+
+    def token_batch():
+        batch = {"tokens": s((b, sl), jnp.int32),
+                 "labels": s((b, sl), jnp.int32)}
+        if cfg.frontend == "vision_stub":
+            # seq_len counts patches + text (DESIGN.md §4)
+            n_text = sl - cfg.n_patches
+            batch["tokens"] = s((b, n_text), jnp.int32)
+            batch["labels"] = s((b, n_text), jnp.int32)
+            batch["patches"] = s((b, cfg.n_patches, cfg.d_model), jnp.float32)
+        if cfg.enc_dec:
+            batch["frames"] = s((b, cfg.n_enc_frames, cfg.d_model),
+                                jnp.float32)
+        return batch
+
+    if shape.kind == "train":
+        return token_batch()
+
+    if shape.kind == "prefill":
+        batch = token_batch()
+        batch.pop("labels")
+        return batch
+
+    # decode: cache of length seq_len + one token
+    from ..models.decode import init_cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, sl))
+    return {
+        "cache": cache,
+        "tokens": s((b, 1), jnp.int32),
+        "pos": s((), jnp.int32),
+    }

@@ -1,0 +1,38 @@
+from .precision import PrecisionPolicy, lo_matmul
+from .tile_cholesky import (
+    assemble_lower,
+    dst_assemble,
+    dst_cholesky,
+    reference_cholesky,
+    split_tiles,
+    tile_cholesky,
+)
+from .panel_cholesky import (
+    assemble_from_banded,
+    banded_forward_solve,
+    banded_loglik,
+    build_banded_covariance,
+    geostat_loglik_step,
+    panel_cholesky_banded,
+)
+from .likelihood import (
+    build_covariance,
+    dst_loglik,
+    loglik_from_factor,
+    make_loglik,
+    profiled_loglik_from_factor,
+)
+from .mle import MLEResult, fit_mle, fit_mle_adam, neldermead
+from .kriging import kfold_pmse, krige, pmse
+
+__all__ = [
+    "PrecisionPolicy", "lo_matmul",
+    "assemble_lower", "dst_assemble", "dst_cholesky", "reference_cholesky",
+    "split_tiles", "tile_cholesky",
+    "assemble_from_banded", "banded_forward_solve", "banded_loglik",
+    "build_banded_covariance", "geostat_loglik_step", "panel_cholesky_banded",
+    "build_covariance", "dst_loglik", "loglik_from_factor", "make_loglik",
+    "profiled_loglik_from_factor",
+    "MLEResult", "fit_mle", "fit_mle_adam", "neldermead",
+    "kfold_pmse", "krige", "pmse",
+]

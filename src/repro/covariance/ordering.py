@@ -1,0 +1,83 @@
+"""Spatial location orderings.
+
+The paper's mixed-precision banding assumes "an appropriate ordering" of the
+spatial locations so that correlation decays with tile-index distance.
+ExaGeoStat uses Morton (Z-order); we provide Morton and Hilbert (the latter
+has strictly better locality, which lets a *thinner* double-precision band
+reach the same statistical accuracy -- evaluated as a beyond-paper ablation
+in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def _part1by1(x):
+    """Spread the low 16 bits of x over even bit positions (jnp-friendly)."""
+    x = x & 0x0000FFFF
+    x = (x | (x << 8)) & 0x00FF00FF
+    x = (x | (x << 4)) & 0x0F0F0F0F
+    x = (x | (x << 2)) & 0x33333333
+    x = (x | (x << 1)) & 0x55555555
+    return x
+
+
+def morton_key(locs, bits: int = 16):
+    """Morton (Z-order) key per location. locs: (n, 2) in [0, 1)^2."""
+    locs = jnp.asarray(locs)
+    scale = (1 << bits) - 1
+    q = jnp.clip((locs * scale).astype(jnp.uint32), 0, scale)
+    return _part1by1(q[:, 0]) | (_part1by1(q[:, 1]) << 1)
+
+
+def morton_order(locs, bits: int = 16):
+    """Permutation that sorts locations along the Morton curve."""
+    return jnp.argsort(morton_key(locs, bits))
+
+
+def hilbert_key_np(locs: np.ndarray, bits: int = 16) -> np.ndarray:
+    """Hilbert-curve key (host-side numpy; ordering is a preprocessing step).
+
+    Classic xy -> d conversion with bitwise rotations, vectorized over n.
+    """
+    locs = np.asarray(locs, dtype=np.float64)
+    side = 1 << bits
+    x = np.clip((locs[:, 0] * side).astype(np.uint64), 0, side - 1)
+    y = np.clip((locs[:, 1] * side).astype(np.uint64), 0, side - 1)
+    rx = np.zeros_like(x)
+    ry = np.zeros_like(y)
+    d = np.zeros_like(x)
+    s = np.uint64(side // 2)
+    while s > 0:
+        rx = ((x & s) > 0).astype(np.uint64)
+        ry = ((y & s) > 0).astype(np.uint64)
+        d += s * s * ((3 * rx) ^ ry)
+        # rotate quadrant: if ry == 0 { if rx == 1 mirror; swap x <-> y }
+        flip = (ry == 0) & (rx == 1)
+        x = np.where(flip, s - 1 - x, x)
+        y = np.where(flip, s - 1 - y, y)
+        swap = ry == 0
+        x, y = np.where(swap, y, x), np.where(swap, x, y)
+        s = np.uint64(s // 2)
+    return d
+
+
+def hilbert_order(locs, bits: int = 16):
+    """Permutation that sorts locations along the Hilbert curve."""
+    key = hilbert_key_np(np.asarray(locs), bits)
+    return jnp.asarray(np.argsort(key, kind="stable"))
+
+
+def apply_ordering(locs, z, perm):
+    """Reorder locations and observations with the same permutation."""
+    perm = jnp.asarray(perm)
+    return jnp.asarray(locs)[perm], (None if z is None else jnp.asarray(z)[perm])
+
+
+ORDERINGS = {
+    "morton": morton_order,
+    "hilbert": hilbert_order,
+    "none": lambda locs, bits=16: jnp.arange(np.asarray(locs).shape[0]),
+}

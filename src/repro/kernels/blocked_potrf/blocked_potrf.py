@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: in-VMEM Cholesky of one diagonal tile (dpotrf).
+
+The diagonal-tile factorization is the only inherently sequential tile op
+in Algorithm 1.  It is tiny (nb^3/3 vs the n^3/3 total) but sits on the
+critical path, so it should run entirely out of VMEM with no HBM round
+trips.  This kernel holds the (nb x nb) tile as a value in
+registers/VMEM and runs a right-looking column sweep: per column j, a
+rsqrt-scaled column normalization followed by a rank-1 MXU update of the
+trailing part.  Masks (broadcasted iota) replace dynamic triangular shapes.
+
+nb <= 512 keeps the tile + rank-1 temporaries well under the ~16 MB VMEM
+budget (512^2 * 4 B = 1 MB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _potrf_kernel(a_ref, out_ref):
+    a = a_ref[...].astype(jnp.float32)
+    a = a.reshape(a.shape[-2:])  # squeeze batched (1, n, n) blocks
+    n = a.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)
+
+    def body(j, carry):
+        a, l = carry
+        dj = jax.lax.dynamic_slice(a, (j, j), (1, 1))          # (1, 1)
+        inv = jax.lax.rsqrt(jnp.maximum(dj, 1e-30))
+        col = jax.lax.dynamic_slice(a, (0, j), (n, 1)) * inv   # (n, 1)
+        below = rows > j
+        col_below = jnp.where(below, col, 0.0)
+        col_full = jnp.where(rows == j, jnp.sqrt(jnp.maximum(dj, 0.0)), col_below)
+        l = jax.lax.dynamic_update_slice(l, col_full, (0, j))
+        # rank-1 trailing update (MXU): A -= c c^T on the strictly-below part
+        a = a - jnp.dot(col_below, col_below.T,
+                        preferred_element_type=jnp.float32)
+        return a, l
+
+    _, l = jax.lax.fori_loop(0, n, body, (a, jnp.zeros_like(a)))
+    out_ref[...] = l.reshape(out_ref.shape).astype(out_ref.dtype)
+
+
+def potrf_pallas(a, *, interpret: bool = True):
+    """Cholesky factor (lower) of a single SPD tile, fully in VMEM."""
+    n = a.shape[-1]
+    assert a.shape[-2] == n
+    if a.ndim == 2:
+        return pl.pallas_call(
+            _potrf_kernel,
+            out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
+            in_specs=[pl.BlockSpec((n, n), lambda: (0, 0))],
+            out_specs=pl.BlockSpec((n, n), lambda: (0, 0)),
+            interpret=interpret,
+        )(a)
+    # batched tiles: grid over the leading dim
+    b = a.shape[0]
+    return pl.pallas_call(
+        _potrf_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, n, n), a.dtype),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, n, n), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+        interpret=interpret,
+    )(a)

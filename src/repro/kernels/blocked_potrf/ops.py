@@ -1,0 +1,12 @@
+"""Jitted public wrapper for the in-VMEM potrf kernel."""
+
+from functools import partial
+
+import jax
+
+from .blocked_potrf import potrf_pallas
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def potrf(a, *, interpret: bool = True):
+    return potrf_pallas(a, interpret=interpret)

@@ -1,0 +1,24 @@
+"""Jitted public wrapper for the Matern covariance kernel.
+
+Half-integer smoothness dispatches to the Pallas kernel; general smoothness
+falls back to the pure-jnp Bessel path (the Temme/CF2 series is VPU-heavy
+and not worth a hand-written kernel -- cov-gen is < 1% of MLE FLOPs there).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ...covariance.matern import HALF_INTEGER_NUS
+from .matern_cov import matern_cov_pallas
+from .ref import matern_cov_ref
+
+
+@partial(jax.jit, static_argnames=("nu", "bm", "bn", "out_dtype", "interpret"))
+def matern_cov(locs_a, locs_b, theta, *, nu: float, bm: int = 128, bn: int = 128,
+               out_dtype=jnp.float32, interpret: bool = True):
+    if nu in HALF_INTEGER_NUS:
+        return matern_cov_pallas(locs_a, locs_b, theta, nu=nu, bm=bm, bn=bn,
+                                 out_dtype=out_dtype, interpret=interpret)
+    return matern_cov_ref(locs_a, locs_b, theta, nu=nu, out_dtype=out_dtype)

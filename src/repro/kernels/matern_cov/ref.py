@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the Matern covariance tile kernel."""
+
+import jax.numpy as jnp
+
+from ...covariance.matern import HALF_INTEGER_NUS, matern_covariance
+
+
+def matern_cov_ref(locs_a, locs_b, theta, *, nu: float, out_dtype=jnp.float32):
+    theta = jnp.asarray(theta, jnp.float32)
+    theta = jnp.array([theta[0], theta[1], jnp.float32(nu)])
+    nu_static = nu if nu in HALF_INTEGER_NUS else None
+    return matern_covariance(locs_a, locs_b, theta,
+                             nu_static=nu_static).astype(out_dtype)

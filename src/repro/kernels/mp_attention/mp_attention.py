@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: banded-precision flash decode attention.
+
+The paper's insight -- correlation decays with distance, so numerical
+precision can too -- transplanted to the LM serving path (DESIGN.md §4):
+during decode, the KV cache splits into
+
+  * a NEAR segment (recent window) stored in bf16, and
+  * a FAR segment (distant tokens) quantized to int8 with per-block scales
+    (the "single precision off-band tiles"; an int8 block is the KV-cache
+    analogue of the paper's SP tile, halving decode HBM traffic -- decode
+    is memory-bound, so this converts directly into step-time).
+
+One flash-decode kernel processes one segment: grid (batch*kv_head,
+kv_blocks), online-softmax state (m, l, acc) accumulated in the revisited
+output blocks.  ops.py runs the kernel once per segment and merges the
+partial softmaxes (the standard sequence-parallel attention combine).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_segment_kernel(q_ref, k_ref, v_ref, scale_ref, len_ref,
+                          acc_ref, m_ref, l_ref, *,
+                          blk: int, sm_scale: float, dequant: bool):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)            # (1, G, d) block
+    q = q.reshape(q.shape[-2:])                   # (G, d)
+    k = k_ref[...].reshape(k_ref.shape[-2:])      # (blk, d)
+    v = v_ref[...].reshape(v_ref.shape[-2:])      # (blk, d)
+    if dequant:
+        k_sc = scale_ref[0, 0, 0]
+        v_sc = scale_ref[0, 0, 1]
+        k = k.astype(jnp.float32) * k_sc
+        v = v.astype(jnp.float32) * v_sc
+    else:
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+
+    # mask out positions beyond the segment's valid length
+    seg_len = len_ref[0, 0]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, k.shape[0]), 1) + s * blk
+    valid = pos < seg_len                          # (1, blk)
+
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+    scores = jnp.where(valid, scores, NEG_INF)     # (G, blk)
+
+    g = q.shape[0]
+    m_prev = m_ref[...].reshape(g, 1)
+    l_prev = l_ref[...].reshape(g, 1)
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc_ref[...].reshape(q.shape) * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    m_ref[...] = m_new.reshape(m_ref.shape)
+    l_ref[...] = l_new.reshape(l_ref.shape)
+    acc_ref[...] = acc_new.reshape(acc_ref.shape)
+
+
+def flash_decode_segment(q, k, v, scales, seg_len, *, blk: int = 128,
+                         sm_scale: float = 1.0, interpret: bool = True):
+    """Partial flash attention over one KV segment.
+
+    q: (B, G, d) fp32/bf16 -- B folds batch*kv_heads, G = q heads per kv.
+    k, v: (B, S, d) bf16 (near) or int8 (far).
+    scales: (B, S//blk, 2) fp32 per-block (k, v) dequant scales, or None.
+    seg_len: (B,) int32 valid lengths (for ragged/growing caches).
+    Returns un-normalized (acc (B, G, d) f32, m (B, G, 1), l (B, G, 1)).
+    """
+    b, g, d = q.shape
+    s = k.shape[1]
+    assert s % blk == 0, (s, blk)
+    nblk = s // blk
+    dequant = scales is not None
+    if scales is None:
+        scales = jnp.zeros((b, nblk, 2), jnp.float32)
+    seg_len2d = seg_len.reshape(b, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_flash_segment_kernel, blk=blk,
+                               sm_scale=sm_scale, dequant=dequant)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, g, 1), jnp.float32),
+        ),
+        grid=(b, nblk),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda i, s_: (i, 0, 0)),
+            pl.BlockSpec((1, blk, d), lambda i, s_: (i, s_, 0)),
+            pl.BlockSpec((1, blk, d), lambda i, s_: (i, s_, 0)),
+            pl.BlockSpec((1, 1, 2), lambda i, s_: (i, s_, 0)),
+            pl.BlockSpec((1, 1), lambda i, s_: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, g, d), lambda i, s_: (i, 0, 0)),
+            pl.BlockSpec((1, g, 1), lambda i, s_: (i, 0, 0)),
+            pl.BlockSpec((1, g, 1), lambda i, s_: (i, 0, 0)),
+        ),
+        interpret=interpret,
+    )(q, k, v, scales, seg_len2d)
+    return acc, m, l

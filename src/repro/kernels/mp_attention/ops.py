@@ -1,0 +1,64 @@
+"""Public API for banded-precision decode attention.
+
+banded_decode_attention(q, near KV bf16, far KV int8) -> attention output.
+quantize_kv() produces the far-segment int8 blocks + per-block scales.
+GQA is handled by folding kv_heads into the batch dim.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .mp_attention import flash_decode_segment
+
+
+def quantize_kv(k, v, *, blk: int = 128):
+    """Per-(batch, block) symmetric int8 quantization of a KV segment.
+
+    k, v: (B, S, d) float -> int8 (B, S, d), scales (B, S//blk, 2) fp32.
+    """
+    b, s, d = k.shape
+    assert s % blk == 0
+    nblk = s // blk
+    kb = k.astype(jnp.float32).reshape(b, nblk, blk, d)
+    vb = v.astype(jnp.float32).reshape(b, nblk, blk, d)
+    k_sc = jnp.max(jnp.abs(kb), axis=(2, 3)) / 127.0 + 1e-12
+    v_sc = jnp.max(jnp.abs(vb), axis=(2, 3)) / 127.0 + 1e-12
+    kq = jnp.round(kb / k_sc[:, :, None, None]).astype(jnp.int8).reshape(b, s, d)
+    vq = jnp.round(vb / v_sc[:, :, None, None]).astype(jnp.int8).reshape(b, s, d)
+    scales = jnp.stack([k_sc, v_sc], axis=-1)
+    return kq, vq, scales
+
+
+def merge_partials(parts):
+    """Combine per-segment (acc, m, l) with the log-sum-exp merge."""
+    accs, ms, ls = zip(*parts)
+    m_tot = ms[0]
+    for m in ms[1:]:
+        m_tot = jnp.maximum(m_tot, m)
+    num = jnp.zeros_like(accs[0])
+    den = jnp.zeros_like(ls[0])
+    for acc, m, l in parts:
+        w = jnp.exp(m - m_tot)
+        num = num + acc * w
+        den = den + l * w
+    return num / den
+
+
+@partial(jax.jit, static_argnames=("blk", "sm_scale", "interpret"))
+def banded_decode_attention(q, k_near, v_near, near_len,
+                            k_far, v_far, far_scales, far_len, *,
+                            blk: int = 128, sm_scale: float = 1.0,
+                            interpret: bool = True):
+    """Decode attention over a two-precision KV cache.
+
+    q: (B, G, d); near: (B, Sn, d) bf16/f32; far: (B, Sf, d) int8 with
+    (B, Sf//blk, 2) scales; *_len: (B,) valid lengths per segment.
+    Returns (B, G, d) fp32.
+    """
+    near = flash_decode_segment(q, k_near, v_near, None, near_len,
+                                blk=blk, sm_scale=sm_scale, interpret=interpret)
+    far = flash_decode_segment(q, k_far, v_far, far_scales, far_len,
+                               blk=blk, sm_scale=sm_scale, interpret=interpret)
+    return merge_partials([near, far])

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for banded-precision decode attention."""
+
+import jax
+import jax.numpy as jnp
+
+
+def banded_decode_attention_ref(q, k_near, v_near, near_len,
+                                k_far, v_far, far_scales, far_len, *,
+                                blk: int = 128, sm_scale: float = 1.0):
+    """Full-softmax reference with identical quantization semantics."""
+    b, g, d = q.shape
+    q = q.astype(jnp.float32)
+
+    def dequant(x, scales, col):
+        nblk = scales.shape[1]
+        xb = x.astype(jnp.float32).reshape(b, nblk, -1, d)
+        return (xb * scales[:, :, col][:, :, None, None]).reshape(b, -1, d)
+
+    kf = dequant(k_far, far_scales, 0)
+    vf = dequant(v_far, far_scales, 1)
+    kn = k_near.astype(jnp.float32)
+    vn = v_near.astype(jnp.float32)
+
+    k = jnp.concatenate([kn, kf], axis=1)
+    v = jnp.concatenate([vn, vf], axis=1)
+    pos_n = jnp.arange(kn.shape[1])[None] < near_len[:, None]
+    pos_f = jnp.arange(kf.shape[1])[None] < far_len[:, None]
+    valid = jnp.concatenate([pos_n, pos_f], axis=1)          # (B, S)
+
+    scores = jnp.einsum("bgd,bsd->bgs", q, k) * sm_scale
+    scores = jnp.where(valid[:, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bgs,bsd->bgd", p, v)

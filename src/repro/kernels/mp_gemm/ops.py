@@ -1,0 +1,14 @@
+"""Jitted public wrapper for the banded mixed-precision SYRK."""
+
+from functools import partial
+
+import jax
+
+from .mp_gemm import mp_syrk_pallas
+
+
+@partial(jax.jit, static_argnames=("band_blocks", "bm", "bk", "interpret"))
+def mp_syrk(p, *, band_blocks: int, bm: int = 128, bk: int = 128,
+            interpret: bool = True):
+    return mp_syrk_pallas(p, band_blocks=band_blocks, bm=bm, bk=bk,
+                          interpret=interpret)

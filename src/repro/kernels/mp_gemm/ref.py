@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the banded mixed-precision SYRK kernel."""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def mp_syrk_ref(p, *, band_blocks: int, bm: int = 128, bk: int = 128):
+    """Blockwise reference with identical precision routing and k-loop
+    rounding order as the kernel."""
+    m, kdim = p.shape
+    nb = m // bm
+    nk = kdim // bk
+    out = np.zeros((m, m), dtype=np.float32)
+    p = np.asarray(p, np.float32)
+    for i in range(nb):
+        for j in range(nb):
+            acc = np.zeros((bm, bm), np.float32)
+            for k in range(nk):
+                a = p[i * bm:(i + 1) * bm, k * bk:(k + 1) * bk]
+                b = p[j * bm:(j + 1) * bm, k * bk:(k + 1) * bk]
+                if abs(i - j) < band_blocks:
+                    acc += a @ b.T
+                else:
+                    a16 = jnp.asarray(a).astype(jnp.bfloat16)
+                    b16 = jnp.asarray(b).astype(jnp.bfloat16)
+                    d = jnp.matmul(a16, b16.T, preferred_element_type=jnp.float32)
+                    acc += np.asarray(d.astype(jnp.bfloat16).astype(jnp.float32))
+            out[i * bm:(i + 1) * bm, j * bm:(j + 1) * bm] = acc
+    return jnp.asarray(out)

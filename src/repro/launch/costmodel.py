@@ -1,0 +1,279 @@
+"""Analytic per-cell cost model for the roofline terms.
+
+WHY ANALYTIC: XLA's compiled-module cost_analysis counts while-loop bodies
+ONCE, not x trip-count.  Our production graphs are scan-heavy (cycles,
+microbatches, query chunks, SSM steps), so raw cost_analysis undercounts
+FLOPs/bytes by 10-1000x depending on arch.  The roofline table therefore
+uses this analytic model -- exact for matmul FLOPs, explicit-assumption
+traffic models for HBM bytes and collective bytes -- and the test suite
+validates the FLOPs model against cost_analysis on small UNROLLED variants
+(tests/test_costmodel.py).  Raw cost_analysis numbers are still recorded
+in the dry-run JSONs (extras) for transparency.
+
+All quantities are GLOBAL per optimizer step (train) or per token step
+(decode/prefill); the roofline report divides by chips.
+
+Key modelling assumptions (documented per EXPERIMENTS.md §Methodology):
+  * backward = 2x forward matmul FLOPs; full remat adds ~1x recompute
+  * bf16 activations (2 B), fp32 params/moments (4 B), bf16 KV cache
+  * FSDP all-gather: ~P bytes per chip per traversal of the params;
+    grad reduce-scatter+all-gather ~ 2P bytes; ring all-reduce ~ 2X bytes
+  * TP all-reduce: 2 x activation bytes per (attn, mlp) block output
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..models.config import ArchConfig
+from ..configs.shapes import ShapeSpec
+
+BF16 = 2
+F32 = 4
+
+
+@dataclasses.dataclass
+class CellCost:
+    flops: float                # global FLOPs per step (bf16-equivalent)
+    hbm_bytes: float            # global HBM traffic per step
+    collective_bytes_per_chip: float
+    model_flops: float          # 6*N_active*D (train) / 2*N_active*D (serve)
+    detail: dict
+
+
+# ---------------------------------------------------------------- blocks
+
+def _attn_flops(cfg: ArchConfig, b, s, skv=None, causal=True):
+    skv = skv or s
+    h, kv, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_model
+    if cfg.swa_window and causal:
+        skv_eff = min(cfg.swa_window, skv)
+    else:
+        skv_eff = skv
+    proj = 2 * b * s * d * (h + 2 * kv) * hd + 2 * b * s * h * hd * d
+    factor = 0.5 if (causal and skv == s and not cfg.swa_window) else 1.0
+    if cfg.swa_window and causal:
+        factor = 1.0  # window already truncates skv_eff
+    scores = 2 * 2 * b * s * skv_eff * h * hd * factor
+    return proj + scores
+
+
+def _mlp_flops(cfg, b, s):
+    return 3 * 2 * b * s * cfg.d_model * cfg.d_ff
+
+
+def _moe_flops(cfg, b, s):
+    spec = cfg.moe
+    t_eff = spec.capacity_factor * spec.top_k * b * s
+    router = 2 * b * s * cfg.d_model * spec.n_experts
+    experts = 3 * 2 * t_eff * cfg.d_model * spec.d_expert
+    return router + experts
+
+
+def _mamba_flops(cfg, b, s):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_d_state
+    r = max(1, d // 16)
+    return (2 * b * s * d * 2 * d_in          # in_proj
+            + 2 * b * s * d_in * cfg.ssm_conv  # conv
+            + 2 * b * s * d_in * (r + 2 * n)   # x_proj
+            + 2 * b * s * r * d_in             # dt_proj
+            + 8 * b * s * d_in * n             # scan + y einsum
+            + 2 * b * s * d_in * d)            # out_proj
+
+
+def _mlstm_flops(cfg, b, s):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    hd = d_in // cfg.n_heads
+    return (2 * b * s * d * 2 * d_in
+            + 3 * 2 * b * s * d_in * d_in
+            + 6 * b * s * d_in * hd            # C update + readout
+            + 2 * b * s * d_in * d)
+
+
+def _slstm_flops(cfg, b, s):
+    d = cfg.d_model
+    hd = d // cfg.n_heads
+    return (2 * b * s * d * 4 * d
+            + 8 * b * s * d * hd               # block-diag recurrence
+            + 2 * b * s * d * d)
+
+
+_BLOCK_FLOPS = {"attn": _attn_flops, "mamba": _mamba_flops,
+                "mlstm": _mlstm_flops, "slstm": _slstm_flops}
+
+
+def _forward_flops(cfg: ArchConfig, b, s, *, causal=True):
+    total = 0.0
+    for i in range(cfg.n_layers):
+        bt = cfg.layer_block_type(i)
+        if bt == "attn":
+            total += _attn_flops(cfg, b, s, causal=causal)
+        else:
+            total += _BLOCK_FLOPS[bt](cfg, b, s)
+        if cfg.layer_is_moe(i):
+            total += _moe_flops(cfg, b, s)
+        elif cfg.d_ff and bt in ("attn", "mamba"):
+            total += _mlp_flops(cfg, b, s)
+    if cfg.enc_dec:
+        f = cfg.n_enc_frames
+        for _ in range(cfg.n_enc_layers):
+            total += _attn_flops(cfg, b, f, causal=False) + _mlp_flops(cfg, b, f)
+        total += cfg.n_layers * (  # decoder cross attention
+            2 * b * s * cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head
+            + 2 * 2 * b * s * f * cfg.n_heads * cfg.d_head
+            + 2 * b * s * cfg.n_heads * cfg.d_head * cfg.d_model)
+    total += 2 * b * s * cfg.d_model * cfg.vocab   # logits
+    return total
+
+
+def _param_bytes(cfg: ArchConfig, dtype_bytes=F32):
+    from .roofline import active_param_count
+    import jax
+    from ..models.transformer import init_lm
+    shapes = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), cfg)[0])
+    import numpy as np
+    total = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+    return total * dtype_bytes, total
+
+
+def _act_bytes_per_layer(cfg, b, s):
+    return b * s * cfg.d_model * BF16
+
+
+def _cache_bytes(cfg: ArchConfig, b, s, *, kv_quant: bool = False):
+    kv, hd = cfg.n_kv_heads, cfg.d_head
+    attn_bytes = (1 + 4.0 / hd) if kv_quant else BF16  # int8 + fp32 scale
+    total = 0
+    for i in range(cfg.n_layers):
+        bt = cfg.layer_block_type(i)
+        if bt == "attn":
+            w = min(cfg.swa_window or s, s)
+            total += 2 * b * w * kv * hd * attn_bytes
+        elif bt == "mamba":
+            d_in = cfg.ssm_expand * cfg.d_model
+            total += b * d_in * (cfg.ssm_d_state * F32 + (cfg.ssm_conv - 1) * BF16)
+        elif bt == "mlstm":
+            d_in = cfg.ssm_expand * cfg.d_model
+            hd_i = d_in // cfg.n_heads
+            total += b * cfg.n_heads * (hd_i * hd_i + hd_i + 1) * F32
+        elif bt == "slstm":
+            total += 4 * b * cfg.d_model * F32
+    if cfg.enc_dec:
+        total += cfg.n_layers * 2 * b * cfg.n_enc_frames * kv * hd * BF16
+    return total
+
+
+# ------------------------------------------------------------------ cells
+
+def lm_cell_cost(cfg: ArchConfig, shape: ShapeSpec, *, chips: int,
+                 mesh_axes: dict, microbatches: int = 1,
+                 opts: dict | None = None) -> CellCost:
+    """mesh_axes: {"data": 16, "model": 16, ["pod": 2]}.
+
+    opts (perf variants, EXPERIMENTS.md §Perf): no_fsdp (replicate params
+    over data: no gathers, full-grad all-reduce), compression=bf16|int8
+    (quantized grad reduce), kv_quant (int8 KV cache)."""
+    opts = opts or {}
+    from .roofline import active_param_count
+    b, s = shape.global_batch, shape.seq_len
+    n_active = active_param_count(cfg)
+    p_bytes, p_count = _param_bytes(cfg)
+    data_ways = mesh_axes.get("data", 1) * mesh_axes.get("pod", 1)
+    model_ways = mesh_axes.get("model", 1)
+
+    if shape.kind == "train":
+        fwd = _forward_flops(cfg, b, s)
+        flops = 4.0 * fwd if cfg.remat else 3.0 * fwd  # fwd+recompute+2bwd
+        model_flops = 6.0 * n_active * b * s
+        # HBM traffic: params (3 traversals per microbatch + optimizer),
+        # layer activations (~8 passes incl. recompute), score matrices (3x)
+        acts = _act_bytes_per_layer(cfg, b, s) * cfg.n_layers * 8
+        h_sc = cfg.n_heads * (min(cfg.swa_window, s) if cfg.swa_window else s)
+        scores = 3 * b * s * h_sc * F32 * (0.5 if not cfg.swa_window else 1.0)
+        logits = 3 * b * s * cfg.vocab * F32
+        hbm = p_bytes * (3 * microbatches + 6) + acts + scores + logits
+        # collectives per chip: FSDP param all-gathers in COMPUTE dtype
+        # (bf16 -- the master->bf16 cast happens before the cycle scan),
+        # fwd+recompute+bwd per microbatch; grad RS/AG; TP all-reduces
+        grad_bytes = {"bf16": BF16, "int8": 1}.get(
+            opts.get("compression"), F32)
+        fsdp = (0.0 if opts.get("no_fsdp")
+                else 3 * microbatches * p_count * BF16)
+        grads = 2 * p_count * grad_bytes
+        tp_ar = (2 * 2 * microbatches * cfg.n_layers
+                 * _act_bytes_per_layer(cfg, b // max(data_ways, 1), s))
+        coll = fsdp + grads + tp_ar if model_ways > 1 or data_ways > 1 else 0.0
+        detail = {"fwd_flops": fwd, "param_bytes": p_bytes,
+                  "act_bytes": acts, "fsdp": fsdp, "grads": grads,
+                  "tp_ar": tp_ar}
+    elif shape.kind == "prefill":
+        flops = _forward_flops(cfg, b, s)
+        model_flops = 2.0 * n_active * b * s
+        acts = _act_bytes_per_layer(cfg, b, s) * cfg.n_layers * 3
+        hbm = p_bytes + acts + _cache_bytes(cfg, b, s)
+        # weight-stationary serving: per-block activation all-reduces only
+        coll = 4 * cfg.n_layers * _act_bytes_per_layer(
+            cfg, max(b // max(data_ways, 1), 1), s)
+        detail = {"param_bytes": p_bytes, "cache_bytes": _cache_bytes(cfg, b, s)}
+    else:  # decode
+        flops = _forward_flops(cfg, b, 1, causal=False)
+        # attention reads the cache: add 2*b*1*S_eff*h*hd x2 einsums
+        for i in range(cfg.n_layers):
+            if cfg.layer_block_type(i) == "attn":
+                s_eff = min(cfg.swa_window or s, s)
+                flops += 2 * 2 * b * s_eff * cfg.n_heads * cfg.d_head
+        model_flops = 2.0 * n_active * b
+        cache = _cache_bytes(cfg, b, s, kv_quant=bool(opts.get("kv_quant")))
+        hbm = p_bytes + cache  # read all params + whole cache once
+        # weight-stationary: per-layer activation all-reduce (both axes)
+        coll = 4 * cfg.n_layers * b * cfg.d_model * BF16
+        detail = {"param_bytes": p_bytes, "cache_bytes": cache}
+
+    return CellCost(flops=flops, hbm_bytes=hbm,
+                    collective_bytes_per_chip=coll,
+                    model_flops=model_flops, detail=detail)
+
+
+def geostat_cell_cost(n: int, nb: int, diag_thick: int, *, chips: int,
+                      off_update: str = "masked_full") -> CellCost:
+    """Mixed-precision panel Cholesky + Matern cov-gen + solve.
+
+    FLOPs are reported bf16-equivalent: fp32 MXU ops cost ~6x bf16 on v5e,
+    so hi-band FLOPs are weighted x6 (this is exactly the paper's speedup
+    mechanism on TPU).
+
+    off_update waste factors over the useful n^3/3 (core/distributed.py):
+      masked_full : every step updates the full (n, n) matrix -> 3.0x
+      aligned     : rows pruned to the 16-tile boundary, full cols -> 1.5x
+      square      : single-device banded engine, full m x m square -> 2.0x
+      chunked     : exact lower trapezoid -> 1.0x
+    """
+    p = n // nb
+    t = min(diag_thick, p)
+    # band fraction of the trailing updates
+    total_tiles = p * (p + 1) / 2
+    band_tiles = t * p - t * (t - 1) / 2
+    band_frac = band_tiles / total_tiles
+    chol = n ** 3 / 3.0
+    waste = {"masked_full": 3.0, "fori": 3.0, "aligned": 1.5,
+             "square": 2.0, "chunked": 1.0}[off_update]
+    lo_flops = chol * (1 - band_frac) * waste
+    hi_flops = chol * band_frac * 6.0          # fp32 on MXU ~6x
+    covgen = 50.0 * n * n                      # ~50 flops/entry Matern
+    solve = 2.0 * n * n
+    flops = lo_flops + hi_flops + covgen + solve
+    # memory: off stored bf16, band fp32; each panel step rereads trailing
+    off_bytes = n * n / 2 * BF16
+    band_bytes = n * t * nb * F32
+    hbm = off_bytes * p * 2 * (waste / 2 + 0.5) + band_bytes * p + covgen * 0
+    # collectives: per step all-gather the panel column (both mesh axes)
+    coll_panel = sum((n - (k + 1) * nb) * nb * BF16 * 2 for k in range(p))
+    coll = coll_panel / max(chips ** 0.5, 1)   # gathered along one mesh row
+    return CellCost(flops=flops, hbm_bytes=hbm,
+                    collective_bytes_per_chip=coll,
+                    model_flops=chol,
+                    detail={"band_frac": band_frac, "p": p, "t": t,
+                            "lo_flops": lo_flops, "hi_flops": hi_flops})

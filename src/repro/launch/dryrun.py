@@ -1,0 +1,413 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before any other import (jax locks the
+# device count on first init).  This module -- and ONLY this module --
+# sees 512 placeholder CPU devices so the 16x16 and 2x16x16 production
+# meshes can be built; smoke tests and benchmarks see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell, prove it fits, and extract roofline terms.
+
+Per cell:
+  jit(step).lower(ShapeDtypeStructs-with-shardings).compile()
+  -> compiled.memory_analysis()   (proves the memory plan fits 16 GB/chip)
+  -> compiled.cost_analysis()     (FLOPs / bytes for EXPERIMENTS.md §Roofline)
+  -> HLO text collective parse    (collective roofline term)
+
+Usage:
+  python -m repro.launch.dryrun --cell qwen3-4b:train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+  python -m repro.launch.dryrun --geostat geostat_500k --mesh single
+(--all spawns one subprocess per cell for isolation.)
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import (ALL_ARCHS, GEOSTAT_CONFIGS, SHAPES, cell_applicable,
+                       input_specs)
+from ..models.sharding import resolve_spec, tree_resolve_shardings
+from ..train import TrainConfig, make_train_step
+from .mesh import make_production_mesh, mesh_num_devices
+from .roofline import analyze_compiled, lm_model_flops
+
+HBM_PER_CHIP = 16 * 2 ** 30  # v5e
+
+
+# ------------------------------------------------------------ shardings
+
+def _greedy_cache_sharding(mesh, leaf, *, batch_dim=1):
+    """Auto-shard a cache/state leaf: batch over (pod, data) when it
+    divides; then the largest remaining dims over unused axes."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = [None] * leaf.ndim
+    used = set()
+    if leaf.ndim > batch_dim:
+        b = leaf.shape[batch_dim]
+        axes = tuple(a for a in ("pod", "data") if a in axis_sizes)
+        if axes and all(b % axis_sizes[a] == 0 for a in axes) and \
+                b % int(np.prod([axis_sizes[a] for a in axes])) == 0:
+            spec[batch_dim] = axes if len(axes) > 1 else axes[0]
+            used.update(axes)
+    # remaining dims, largest first (skip dim 0 = stacked cycles)
+    order = sorted(range(1, leaf.ndim), key=lambda i: -leaf.shape[i])
+    for ax_name in mesh.axis_names:
+        if ax_name in used:
+            continue
+        for i in order:
+            if spec[i] is None and leaf.shape[i] % axis_sizes[ax_name] == 0 \
+                    and leaf.shape[i] >= axis_sizes[ax_name] * 8:
+                spec[i] = ax_name
+                used.add(ax_name)
+                break
+    return NamedSharding(mesh, P(*spec))
+
+
+def _with_sharding(struct_tree, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        struct_tree, shardings)
+
+
+def _batch_shardings(mesh, batch_tree):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def one(leaf):
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        total = int(np.prod([axis_sizes[a] for a in axes]))
+        if leaf.shape[0] % total == 0:
+            spec = (axes if len(axes) > 1 else axes[0],) + (None,) * (leaf.ndim - 1)
+        else:
+            spec = (None,) * leaf.ndim
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def _param_shardings(mesh, cfg, rules=None):
+    from ..models.transformer import init_lm
+    box = {}
+
+    def params_only(key):
+        p, axes = init_lm(key, cfg)
+        box["axes"] = axes  # strings: side-channel out of the trace
+        return p
+
+    shapes = jax.eval_shape(params_only, jax.random.PRNGKey(0))
+    shardings = jax.tree.map(
+        lambda s, a: NamedSharding(mesh, resolve_spec(a, mesh, rules,
+                                                      shape=s.shape)),
+        shapes, box["axes"])
+    return shapes, shardings
+
+
+def _rules_for_opts(opts):
+    from ..models.sharding import DEFAULT_RULES
+    rules = dict(DEFAULT_RULES)
+    if opts.get("no_fsdp"):
+        rules["embed"] = ()   # replicate params over data (pure DP)
+    return rules
+
+
+# ------------------------------------------------------------ LM cells
+
+# Per-arch production knobs for the train cells, sized so fp32 master +
+# Adam + remat'd activations fit 16 GB/chip (EXPERIMENTS.md §Dry-run).
+# remat_group: 2-level remat group size; microbatches: grad accumulation;
+# moment_dtype: bf16 first moment (grok-1's 314B x 12B/param squeeze).
+TRAIN_OVERRIDES = {
+    "grok-1-314b": dict(microbatches=8, moment_dtype="bfloat16",
+                        remat_group=8),
+    "qwen3-32b": dict(microbatches=2, remat_group=8),
+    "llava-next-34b": dict(microbatches=2, remat_group=6),
+    "qwen3-moe-30b-a3b": dict(remat_group=8),
+    "jamba-v0.1-52b": dict(microbatches=2, remat_group=2),
+    "xlstm-1.3b": dict(remat_group=8),
+    "h2o-danube-1.8b": dict(remat_group=4),
+    "qwen3-4b": dict(remat_group=6),
+    "llama3.2-1b": dict(remat_group=4),
+}
+
+
+def arch_for_cell(arch: str):
+    import dataclasses as _dc
+    cfg = ALL_ARCHS[arch]
+    ov = TRAIN_OVERRIDES.get(arch, {})
+    if "remat_group" in ov:
+        cfg = _dc.replace(cfg, remat_group=ov["remat_group"])
+    return cfg
+
+
+def lower_lm_cell(arch: str, shape_name: str, mesh, opts=None):
+    opts = opts or {}
+    cfg = arch_for_cell(arch)
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    if opts.get("kv_quant") and shape.kind == "decode":
+        from ..models.decode import init_cache
+        specs["cache"] = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                               kv_quant=True))
+    rules = _rules_for_opts(opts)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        ov = TRAIN_OVERRIDES.get(arch, {})
+        tc = TrainConfig(microbatches=ov.get("microbatches", 1),
+                         moment_dtype=("bfloat16" if opts.get("moment_bf16")
+                                       else ov.get("moment_dtype", "float32")),
+                         compression=opts.get("compression", "none"))
+        p_shapes, p_shard = _param_shardings(mesh, cfg, rules)
+        mdt = jnp.bfloat16 if tc.moment_dtype == "bfloat16" else jnp.float32
+        m_shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, mdt), p_shapes)
+        state_shapes = {
+            "params": p_shapes,
+            "opt": {"m": m_shapes, "v": p_shapes,
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)},
+            "data_step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        state_shard = {
+            "params": p_shard,
+            "opt": {"m": p_shard, "v": p_shard, "step": repl},
+            "data_step": repl,
+        }
+        if tc.compression != "none":
+            state_shapes["residual"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_shapes)
+            state_shard["residual"] = p_shard
+        state_in = _with_sharding(state_shapes, state_shard)
+        batch_in = _with_sharding(specs, _batch_shardings(mesh, specs))
+        step = make_train_step(cfg, tc)
+        lowered = jax.jit(step, donate_argnums=(0,)).lower(state_in, batch_in)
+        return lowered, lm_model_flops(cfg, shape)
+
+    p_shapes, p_shard = _param_shardings(mesh, cfg, rules)
+    params_in = _with_sharding(p_shapes, p_shard)
+
+    if shape.kind == "prefill":
+        from ..models.decode import prefill
+
+        def prefill_fn(params, batch):
+            return prefill(params, batch["tokens"], cfg,
+                           extra_embeds=batch.get("patches"),
+                           frames=batch.get("frames"))
+
+        batch_in = _with_sharding(specs, _batch_shardings(mesh, specs))
+        lowered = jax.jit(prefill_fn).lower(params_in, batch_in)
+        return lowered, lm_model_flops(cfg, shape)
+
+    # decode
+    from ..models.decode import decode_step
+    cache_shard = jax.tree.map(lambda s: _greedy_cache_sharding(mesh, s),
+                               specs["cache"])
+    cache_in = _with_sharding(specs["cache"], cache_shard)
+    tokens_in = _with_sharding(
+        {"t": specs["tokens"]}, _batch_shardings(mesh, {"t": specs["tokens"]}))["t"]
+    pos_in = jax.ShapeDtypeStruct((), jnp.int32, sharding=repl)
+
+    def decode_fn(params, cache, tokens, pos):
+        return decode_step(params, cache, tokens, pos, cfg)
+
+    lowered = jax.jit(decode_fn, donate_argnums=(1,)).lower(
+        params_in, cache_in, tokens_in, pos_in)
+    return lowered, lm_model_flops(cfg, shape)
+
+
+# -------------------------------------------------------- geostat cells
+
+def lower_geostat_cell(name: str, mesh, version: str = "masked_full"):
+    from ..core import PrecisionPolicy
+    from ..core.distributed import geostat_loglik_distributed
+    gc = GEOSTAT_CONFIGS[name]
+    policy = PrecisionPolicy.tpu(diag_thick=gc.diag_thick)
+    n, nb = gc.n, gc.nb
+
+    locs = jax.ShapeDtypeStruct((n, 2), jnp.float32,
+                                sharding=NamedSharding(mesh, P()))
+    z = jax.ShapeDtypeStruct((n,), jnp.float32,
+                             sharding=NamedSharding(mesh, P()))
+    theta = jax.ShapeDtypeStruct((3,), jnp.float32,
+                                 sharding=NamedSharding(mesh, P()))
+
+    def step(locs, z, theta):
+        return geostat_loglik_distributed(locs, z, theta, nb=nb,
+                                          policy=policy, nu_static=gc.nu,
+                                          version=version)
+
+    lowered = jax.jit(step).lower(locs, z, theta)
+    model_flops = n ** 3 / 3.0  # useful Cholesky FLOPs
+    return lowered, model_flops
+
+
+# -------------------------------------------------------------- driver
+
+def run_cell(kind: str, arch: str, shape_name: str, mesh_mode: str,
+             out_dir: str, opts=None):
+    opts = opts or {}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_mode == "multi"))
+    from ..models.sharding import set_activation_mesh
+    set_activation_mesh(mesh)
+    chips = mesh_num_devices(mesh)
+    suffix = ("+" + "+".join(sorted(k for k, v in opts.items() if v))
+              if any(opts.values()) else "")
+    name = f"{arch}:{shape_name}:{mesh_mode}{suffix}"
+    if kind == "lm":
+        lowered, model_flops = lower_lm_cell(arch, shape_name, mesh, opts)
+    else:
+        lowered, model_flops = lower_geostat_cell(
+            arch, mesh, version=opts.get("geo_version", "masked_full"))
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(mem)
+    mem_d = {k: int(getattr(mem, k)) for k in
+             ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes")}
+    peak = (mem_d["argument_size_in_bytes"] + mem_d["output_size_in_bytes"]
+            + mem_d["temp_size_in_bytes"] - mem_d["alias_size_in_bytes"])
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    print({k: cost.get(k) for k in ("flops", "bytes accessed")})
+
+    # raw compiled-module numbers (loop bodies counted once -- see
+    # costmodel.py docstring) are kept as a transparency cross-check
+    raw = analyze_compiled(name, mesh_mode, chips, compiled,
+                           model_flops=model_flops)
+
+    # primary roofline terms: analytic cost model
+    from .costmodel import geostat_cell_cost, lm_cell_cost
+    mesh_axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if kind == "lm":
+        cfg = arch_for_cell(arch)
+        shape = SHAPES[shape_name]
+        mb = TRAIN_OVERRIDES.get(arch, {}).get("microbatches", 1) \
+            if shape.kind == "train" else 1
+        cc = lm_cell_cost(cfg, shape, chips=chips, mesh_axes=mesh_axes,
+                          microbatches=mb, opts=opts)
+    else:
+        gc = GEOSTAT_CONFIGS[arch]
+        cc = geostat_cell_cost(
+            gc.n, gc.nb, gc.diag_thick, chips=chips,
+            off_update=opts.get("geo_version", "masked_full"))
+
+    from .roofline import RooflineReport
+    rep = RooflineReport(
+        name=name, mesh=mesh_mode, chips=chips,
+        flops_per_chip=cc.flops / chips,
+        bytes_per_chip=cc.hbm_bytes / chips,
+        collective_bytes_per_chip=cc.collective_bytes_per_chip,
+        model_flops=cc.model_flops,
+        extras={"memory": mem_d,
+                "peak_bytes_per_chip": peak,
+                "fits_hbm": bool(peak <= HBM_PER_CHIP),
+                "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1),
+                "cost_detail": {k: float(v) for k, v in cc.detail.items()
+                                if isinstance(v, (int, float))},
+                "raw_compiled": {
+                    "flops_per_chip": raw.flops_per_chip,
+                    "bytes_per_chip": raw.bytes_per_chip,
+                    "collective_bytes_per_chip":
+                        raw.collective_bytes_per_chip,
+                    "collectives": raw.extras["collectives"],
+                    "note": "while bodies counted once; bf16 buffers "
+                            "f32-inflated by the CPU backend"}},
+    ).finalize()
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{mesh_mode}{suffix}.json".replace("/", "_")
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rep.to_dict(), f, indent=1)
+    print(f"[dryrun] {name}: chips={chips} "
+          f"flops/chip={rep.flops_per_chip:.3e} "
+          f"t_comp={rep.t_compute*1e3:.2f}ms t_mem={rep.t_memory*1e3:.2f}ms "
+          f"t_coll={rep.t_collective*1e3:.2f}ms bottleneck={rep.bottleneck} "
+          f"peak={peak/2**30:.2f}GiB fits={peak <= HBM_PER_CHIP} "
+          f"compile={t_compile:.0f}s")
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", help="arch:shape")
+    ap.add_argument("--geostat", help="geostat config name")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--timeout", type=float, default=2400.0)
+    ap.add_argument("--opts", default="",
+                    help="comma list: no_fsdp,kv_quant,moment_bf16,"
+                         "compression=bf16,geo_version=aligned")
+    args = ap.parse_args()
+
+    opts = {}
+    for item in filter(None, args.opts.split(",")):
+        if "=" in item:
+            k, v = item.split("=", 1)
+            opts[k] = v
+        else:
+            opts[item] = True
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        cells = []
+        for arch, cfg in ALL_ARCHS.items():
+            for sname, shape in SHAPES.items():
+                ok, why = cell_applicable(cfg, shape)
+                if ok:
+                    cells.append(("lm", arch, sname))
+                else:
+                    print(f"[dryrun] SKIP {arch}:{sname}: {why}")
+        for g in ("geostat_500k", "geostat_1m"):
+            cells.append(("geo", g, "-"))
+        failures = []
+        for kind, arch, sname in cells:
+            for m in meshes:
+                if kind == "geo" and ((arch == "geostat_1m") != (m == "multi")):
+                    continue  # 1m is the multi-pod geostat cell
+                fname = f"{arch}__{sname}__{m}.json".replace("/", "_")
+                if os.path.exists(os.path.join(args.out, fname)):
+                    print(f"[dryrun] cached {arch}:{sname}:{m}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--mesh", m, "--out", args.out]
+                cmd += (["--geostat", arch] if kind == "geo"
+                        else ["--cell", f"{arch}:{sname}"])
+                print(f"[dryrun] >>> {arch}:{sname}:{m}")
+                try:
+                    r = subprocess.run(cmd, timeout=args.timeout)
+                    if r.returncode != 0:
+                        failures.append((arch, sname, m, r.returncode))
+                except subprocess.TimeoutExpired:
+                    failures.append((arch, sname, m, "timeout"))
+        print(f"[dryrun] done; {len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    if args.geostat:
+        run_cell("geo", args.geostat, "-", meshes[0], args.out, opts)
+        return
+    arch, sname = args.cell.split(":")
+    run_cell("lm", arch, sname, meshes[0], args.out, opts)
+
+
+if __name__ == "__main__":
+    main()

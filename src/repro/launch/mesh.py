@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (critical: tests must see 1 CPU device; only dryrun.py
+forces 512 placeholder devices via XLA_FLAGS before any jax import).
+
+Topology: TPU v5e pods, 16x16 = 256 chips per pod.
+  single pod : (16, 16)    axes ("data", "model")
+  multi pod  : (2, 16, 16) axes ("pod", "data", "model") -- "pod" is the
+               DCN-connected second data-parallel tier.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1x1 mesh with production axis names: same model/sharding code paths
+    on a single CPU device."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_num_devices(mesh) -> int:
+    return int(np.prod(mesh.devices.shape))
+
+
+# TPU v5e hardware constants for the roofline model (per chip).
+PEAK_BF16_FLOPS = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_LINK_BW = 50e9              # B/s per link

@@ -1,0 +1,183 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (EXPERIMENTS.md §Roofline):
+
+  compute    = HLO_FLOPs / (chips x 197e12)          [bf16 peak, v5e]
+  memory     = HLO_bytes / (chips x 819e9)           [HBM]
+  collective = collective_bytes / (chips x 50e9)     [ICI link]
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis().  XLA reports
+these for the *partitioned per-device module*, so chips-normalization is
+already done -- we multiply back up to globals for reporting and divide
+per the formulas (validated in tests/test_roofline.py on a known matmul).
+
+collective_bytes is not in cost_analysis: we parse the optimized HLO text
+and sum result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+from .mesh import HBM_BW, ICI_LINK_BW, PEAK_BF16_FLOPS
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4,
+    "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2,
+    "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _type_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in the optimized HLO.
+
+    Returns {op_kind: bytes, ..., "total": bytes, "count": n}.
+    `hlo_text` is the per-device partitioned module, so these are
+    per-device bytes entering the network fabric.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    count = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, rhs = stripped.split("=", 1)
+        rhs = rhs.strip()
+        kind = None
+        for k in _COLLECTIVES:
+            # op name directly after result type, e.g.
+            # %ar = f32[1024]{0} all-reduce(...)
+            if re.search(rf"\}}?\s{re.escape(k)}(-start|-done)?\(", rhs) or \
+               re.match(rf"^\(?[a-z0-9]+\[.*\s{re.escape(k)}(-start|-done)?\(",
+                        rhs):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done" in rhs:
+            continue  # counted at -start
+        # result types: everything before the op name token
+        head = rhs.split(kind)[0]
+        nbytes = sum(_type_bytes(d, dims) for d, dims in _TYPE_RE.findall(head))
+        out[kind] += nbytes
+        count += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["count"] = count
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    name: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops: float          # 6*N*D useful-FLOPs reference (0 if n/a)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    extras: dict = dataclasses.field(default_factory=dict)
+
+    def finalize(self):
+        self.t_compute = self.flops_per_chip / PEAK_BF16_FLOPS
+        self.t_memory = self.bytes_per_chip / HBM_BW
+        self.t_collective = self.collective_bytes_per_chip / ICI_LINK_BW
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        return self
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs (catches remat/redundancy waste)."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-term-bound step time that is useful
+        compute: t_useful_compute / max(all terms)."""
+        t_useful = (self.model_flops / self.chips) / PEAK_BF16_FLOPS
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / t_bound if t_bound else 0.0
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        d["useful_flops_fraction"] = self.useful_flops_fraction
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def analyze_compiled(name: str, mesh_name: str, chips: int, compiled,
+                     model_flops: float = 0.0, extras: dict | None = None
+                     ) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    rep = RooflineReport(
+        name=name, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=nbytes,
+        collective_bytes_per_chip=float(coll["total"]),
+        model_flops=model_flops,
+        extras={"collectives": coll, **(extras or {})},
+    )
+    return rep.finalize()
+
+
+def lm_model_flops(cfg, shape) -> float:
+    """6*N*D (dense) or 6*N_active*D (MoE); decode: D = global_batch tokens."""
+    n_params = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params * tokens
+    return 2.0 * n_params * shape.global_batch  # decode: one token per seq
+
+
+def active_param_count(cfg) -> int:
+    """Per-token active parameters (MoE counts top_k experts only)."""
+    import jax
+    from ..models.transformer import init_lm
+
+    shapes = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), cfg)[0])
+    total = sum(int(__import__("numpy").prod(s.shape))
+                for s in jax.tree.leaves(shapes))
+    if cfg.moe is not None:
+        # subtract the inactive expert fraction
+        per_expert = 3 * cfg.d_model * cfg.moe.d_expert
+        n_moe_layers = sum(1 for i in range(len(cfg.block_pattern))
+                           if cfg.layer_is_moe(i)) * cfg.n_cycles
+        inactive = (cfg.moe.n_experts - cfg.moe.top_k) * per_expert * n_moe_layers
+        total -= inactive
+    return total
+
+
+def save_report(path: str, rep: RooflineReport):
+    with open(path, "w") as f:
+        json.dump(rep.to_dict(), f, indent=1)

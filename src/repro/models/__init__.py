@@ -1,0 +1,4 @@
+from .config import ARCH_REGISTRY, ArchConfig, MoESpec, get_arch, register_arch
+from .decode import decode_step, init_cache, prefill
+from .sharding import DEFAULT_RULES, ax, batch_spec, resolve_spec, tree_resolve_shardings
+from .transformer import encode, forward_lm, init_lm, lm_loss

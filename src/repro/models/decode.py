@@ -1,0 +1,335 @@
+"""Serving: cache construction, prefill, and single-token decode.
+
+Cache layout: one pytree entry per block slot in the cycle pattern, each
+stacked over cycles (leading axis n_cycles) so decode lax.scans over
+(cycle_params, cycle_cache) together:
+
+  attn (full) : {k, v: (C, B, S_max, KV, hd)}           (rope'd at write)
+  attn (SWA)  : {k, v: (C, B, W, KV, hd), pos: (C, W)}  (circular)
+  mamba       : {conv: (C, B, K-1, d_in), ssm: (C, B, d_in, N)}
+  mlstm       : {c: (C,B,H,hd,hd), n: (C,B,H,hd), m: (C,B,H)}
+  slstm       : {c, n, h, m: (C, B, H, hd)}
+  whisper     : decoder self cache + cross {k, v: (C, B, F, KV, hd)}
+
+The banded-precision KV option (paper technique -> LM serving, DESIGN.md
+§4) stores the cache bf16 and, through the mp_attention kernel path,
+int8 beyond the near window; here the XLA decode path keeps bf16 storage
+(the kernel variant is exercised in tests/benchmarks).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ArchConfig
+from .layers import attention, rmsnorm, rope
+from .ssm import (mamba_forward, mamba_init_state, mlstm_forward,
+                  mlstm_init_state, slstm_forward, slstm_init_state)
+from .transformer import _apply_block, _sinusoid, encode
+
+CACHE_DTYPE = jnp.bfloat16
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *,
+               kv_quant: bool = False):
+    """Empty cache pytree for decode.
+
+    kv_quant=True stores attention KV int8 with per-row fp32 scales --
+    the XLA-path realization of the paper's distance-banded precision
+    (its t=0 limit; the Pallas mp_attention kernel implements the true
+    near-bf16/far-int8 band).  Halves the cache bytes that dominate the
+    memory-bound decode cells."""
+    c = cfg.n_cycles
+    kv, hd = cfg.n_kv_heads, cfg.d_head
+    cache = {}
+    for i, bt in enumerate(cfg.block_pattern):
+        key = f"b{i}"
+        if bt == "attn":
+            w = min(cfg.swa_window or max_len, max_len)
+            dt = jnp.int8 if kv_quant else CACHE_DTYPE
+            cache[key] = {
+                "k": jnp.zeros((c, batch, w, kv, hd), dt),
+                "v": jnp.zeros((c, batch, w, kv, hd), dt),
+            }
+            if kv_quant:
+                cache[key]["k_scale"] = jnp.zeros((c, batch, w, kv),
+                                                  jnp.float32)
+                cache[key]["v_scale"] = jnp.zeros((c, batch, w, kv),
+                                                  jnp.float32)
+            if cfg.swa_window is not None:
+                cache[key]["pos"] = jnp.full((c, w), -1, jnp.int32)
+        elif bt == "mamba":
+            st = mamba_init_state(batch, cfg)
+            cache[key] = {"conv": jnp.broadcast_to(st[0], (c,) + st[0].shape),
+                          "ssm": jnp.broadcast_to(st[1], (c,) + st[1].shape)}
+        elif bt == "mlstm":
+            st = mlstm_init_state(batch, cfg)
+            cache[key] = {"c": jnp.broadcast_to(st[0], (c,) + st[0].shape),
+                          "n": jnp.broadcast_to(st[1], (c,) + st[1].shape),
+                          "m": jnp.broadcast_to(st[2], (c,) + st[2].shape)}
+        elif bt == "slstm":
+            st = slstm_init_state(batch, cfg)
+            cache[key] = {k2: jnp.broadcast_to(v2, (c,) + v2.shape)
+                          for k2, v2 in zip("cnhm", st)}
+    if cfg.enc_dec:
+        cache["cross"] = {
+            "k": jnp.zeros((c, batch, cfg.n_enc_frames, kv, hd), CACHE_DTYPE),
+            "v": jnp.zeros((c, batch, cfg.n_enc_frames, kv, hd), CACHE_DTYPE),
+        }
+    return cache
+
+
+def _decode_attn(p, x, cfg: ArchConfig, cache, pos):
+    """Single-token GQA attention against the cache. x: (B, 1, d)."""
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = h // kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_theta)
+
+    w = cache["k"].shape[1]
+    slot = pos % w if cfg.swa_window is not None else pos
+    quant = "k_scale" in cache
+    if quant:
+        def _quantize_row(t):
+            sc = jnp.max(jnp.abs(t), axis=-1) / 127.0 + 1e-12   # (B,1,KV)
+            return jnp.round(t / sc[..., None]).astype(jnp.int8), sc
+        k_q, k_sc = _quantize_row(k.astype(jnp.float32))
+        v_q, v_sc = _quantize_row(v.astype(jnp.float32))
+        ck = lax.dynamic_update_slice(cache["k"], k_q, (0, slot, 0, 0))
+        cv = lax.dynamic_update_slice(cache["v"], v_q, (0, slot, 0, 0))
+        ck_sc = lax.dynamic_update_slice(cache["k_scale"], k_sc, (0, slot, 0))
+        cv_sc = lax.dynamic_update_slice(cache["v_scale"], v_sc, (0, slot, 0))
+        new_cache = {"k": ck, "v": cv, "k_scale": ck_sc, "v_scale": cv_sc}
+    else:
+        ck = lax.dynamic_update_slice(cache["k"], k.astype(CACHE_DTYPE),
+                                      (0, slot, 0, 0))
+        cv = lax.dynamic_update_slice(cache["v"], v.astype(CACHE_DTYPE),
+                                      (0, slot, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+    if cfg.swa_window is not None:
+        cpos = lax.dynamic_update_slice(cache["pos"],
+                                        jnp.full((1,), pos, jnp.int32), (slot,))
+        new_cache["pos"] = cpos
+        valid = (cpos >= 0) & (cpos > pos - cfg.swa_window)
+    else:
+        valid = jnp.arange(w) <= pos
+
+    qg = q.reshape(b, 1, kv, g, hd)
+    if quant:
+        ck_f = ck.astype(x.dtype) * ck_sc[..., None].astype(x.dtype)
+        cv_f = cv.astype(x.dtype) * cv_sc[..., None].astype(x.dtype)
+    else:
+        ck_f, cv_f = ck.astype(x.dtype), cv.astype(x.dtype)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, ck_f,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    wts = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", wts, cv_f)
+    out = out.reshape(b, 1, h, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), new_cache
+
+
+def _cross_from_cache(p, x, cfg: ArchConfig, cache):
+    """Cross attention against the (fixed) encoder memory cache."""
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = h // kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+    qg = q.reshape(b, 1, kv, g, hd)
+    ck, cv = cache["k"].astype(x.dtype), cache["v"].astype(x.dtype)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, ck,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    wts = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", wts, cv).reshape(b, 1, h, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def _decode_block(p, x, cfg: ArchConfig, bt: str, cache, pos):
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if bt == "attn":
+        out, new_cache = _decode_attn(p["inner"], h, cfg, cache, pos)
+    elif bt == "mamba":
+        out, st = mamba_forward(p["inner"], h, cfg,
+                                state=(cache["conv"], cache["ssm"]))
+        new_cache = {"conv": st[0].astype(cache["conv"].dtype), "ssm": st[1]}
+    elif bt == "mlstm":
+        out, st = mlstm_forward(p["inner"], h, cfg,
+                                state=(cache["c"], cache["n"], cache["m"]))
+        new_cache = dict(zip("cnm", st))
+    elif bt == "slstm":
+        out, st = slstm_forward(p["inner"], h, cfg,
+                                state=(cache["c"], cache["n"], cache["h"],
+                                       cache["m"]))
+        new_cache = dict(zip("cnhm", st))
+    else:
+        raise ValueError(bt)
+    x = x + out
+    if "cross" in p:
+        hx = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        x = x + _cross_from_cache(p["cross"], hx, cfg, cache["__cross__"])
+    if "ffn_moe" in p:
+        hf = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        from .layers import moe
+        out, _ = moe(p["ffn_moe"], hf, cfg.moe)
+        x = x + out
+    elif "ffn" in p:
+        hf = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        from .layers import mlp
+        x = x + mlp(p["ffn"], hf)
+    return x, new_cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig, *,
+                compute_dtype=jnp.bfloat16):
+    """One decode step. tokens: (B, 1) int32; pos: scalar int32 position.
+    Returns (logits (B, 1, vocab) fp32, new cache)."""
+    x = params["embed"][tokens].astype(compute_dtype)
+
+    cross = cache.get("cross")
+
+    def cycle_fn(x, scanned):
+        cyc_params, cyc_cache, cyc_cross = scanned
+        new_cache = {}
+        for i, bt in enumerate(cfg.block_pattern):
+            blk_cache = dict(cyc_cache[f"b{i}"])
+            if cyc_cross is not None:
+                blk_cache["__cross__"] = cyc_cross
+            x_new, nc = _decode_block(cyc_params[f"b{i}"], x, cfg, bt,
+                                      blk_cache, pos)
+            x = x_new
+            new_cache[f"b{i}"] = nc
+        return x, new_cache
+
+    block_cache = {k: v for k, v in cache.items() if k != "cross"}
+    x, new_block_cache = lax.scan(
+        cycle_fn, x, (params["cycles"], block_cache, cross))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"]).astype(compute_dtype)
+    logits = (x @ unembed).astype(jnp.float32)
+    new_cache = dict(new_block_cache)
+    if cross is not None:
+        new_cache["cross"] = cross
+    return logits, new_cache
+
+
+# ------------------------------------------------------------- prefill
+
+def prefill(params, tokens, cfg: ArchConfig, *, extra_embeds=None,
+            frames=None, compute_dtype=jnp.bfloat16):
+    """Process a full prompt, returning (logits, cache) ready for decode.
+
+    The cache covers exactly the prompt length (padded to the SWA window
+    for SWA archs); decode continues at pos = S.
+    """
+    b, s = tokens.shape
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = encode(params, frames, cfg, compute_dtype=compute_dtype)
+    x = params["embed"][tokens].astype(compute_dtype)
+    if extra_embeds is not None:
+        pe = extra_embeds.astype(compute_dtype)
+        if "vision_adapter" in params:
+            pe = pe @ params["vision_adapter"].astype(compute_dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    s_tot = x.shape[1]
+    positions = jnp.arange(s_tot)[None, :].repeat(b, 0)
+
+    kv, hd = cfg.n_kv_heads, cfg.d_head
+
+    def cycle_fn(x, cyc):
+        new_cache = {}
+        for i, bt in enumerate(cfg.block_pattern):
+            p = cyc[f"b{i}"]
+            h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+            ffn_pending = False  # attn branch applies FFN below;
+            # _apply_block already applies it for the other block types
+            if bt == "attn":
+                ffn_pending = True
+                # run attention AND capture rope'd k/v for the cache
+                k = jnp.einsum("bsd,dhk->bshk", h, p["inner"]["wk"].astype(h.dtype))
+                v = jnp.einsum("bsd,dhk->bshk", h, p["inner"]["wv"].astype(h.dtype))
+                if cfg.qk_norm:
+                    k = rmsnorm(p["inner"]["k_norm"], k, cfg.norm_eps)
+                kr = rope(k, positions, cfg.rope_theta)
+                out = attention(p["inner"], h, cfg, positions=positions)
+                x = x + out
+                if cfg.swa_window is not None and cfg.swa_window < s_tot:
+                    w = cfg.swa_window
+                    new_cache[f"b{i}"] = {
+                        "k": kr[:, -w:].astype(CACHE_DTYPE),
+                        "v": v[:, -w:].astype(CACHE_DTYPE),
+                        "pos": jnp.arange(s_tot - w, s_tot, dtype=jnp.int32),
+                    }
+                elif cfg.swa_window is not None:
+                    pad = cfg.swa_window - s_tot
+                    new_cache[f"b{i}"] = {
+                        "k": jnp.pad(kr, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(CACHE_DTYPE),
+                        "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(CACHE_DTYPE),
+                        "pos": jnp.concatenate([
+                            jnp.arange(s_tot, dtype=jnp.int32),
+                            jnp.full((pad,), -1, jnp.int32)]),
+                    }
+                else:
+                    new_cache[f"b{i}"] = {"k": kr.astype(CACHE_DTYPE),
+                                          "v": v.astype(CACHE_DTYPE)}
+            else:
+                x, _, st = _apply_block(p, x, cfg, bt, positions=positions,
+                                        enc_out=enc_out)
+                if bt == "mamba":
+                    new_cache[f"b{i}"] = {"conv": st[0].astype(CACHE_DTYPE),
+                                          "ssm": st[1]}
+                elif bt == "mlstm":
+                    new_cache[f"b{i}"] = dict(zip("cnm", st))
+                elif bt == "slstm":
+                    new_cache[f"b{i}"] = dict(zip("cnhm", st))
+            if "cross" in p and enc_out is not None:
+                hx = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+                out = attention(p["cross"], hx, cfg, positions=positions,
+                                kv_x=enc_out, causal=False, use_rope=False)
+                x = x + out
+                ck = jnp.einsum("bsd,dhk->bshk", enc_out,
+                                p["cross"]["wk"].astype(h.dtype))
+                cv = jnp.einsum("bsd,dhk->bshk", enc_out,
+                                p["cross"]["wv"].astype(h.dtype))
+                if cfg.qk_norm:
+                    ck = rmsnorm(p["cross"]["k_norm"], ck, cfg.norm_eps)
+                new_cache["__cross__"] = {"k": ck.astype(CACHE_DTYPE),
+                                          "v": cv.astype(CACHE_DTYPE)}
+            if ffn_pending and "ffn_moe" in p:
+                hf = rmsnorm(p["norm2"], x, cfg.norm_eps)
+                from .layers import moe
+                out, _ = moe(p["ffn_moe"], hf, cfg.moe)
+                x = x + out
+            elif ffn_pending and "ffn" in p:
+                hf = rmsnorm(p["norm2"], x, cfg.norm_eps)
+                from .layers import mlp
+                x = x + mlp(p["ffn"], hf)
+        return x, new_cache
+
+    x, caches = lax.scan(cycle_fn, x, params["cycles"])
+    # serving prefill: only the LAST position's logits are needed to start
+    # decoding -- computing (B, S, V) logits at 32k cost 40 GiB/chip
+    x = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"]).astype(compute_dtype)
+    logits = (x @ unembed).astype(jnp.float32)
+    cache = {k: v for k, v in caches.items() if k != "__cross__"}
+    if "__cross__" in caches:
+        cache["cross"] = caches["__cross__"]
+    return logits, cache

@@ -1,0 +1,286 @@
+"""Neural blocks for the model zoo: init + apply, pure functions.
+
+Every init function returns (params, logical_axes) pytrees with identical
+structure; logical axes are packed strings (see sharding.ax).  Apply
+functions are jit/scan/vmap-friendly and take activations in
+`compute_dtype` (bf16 for the TPU path) with fp32 params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ArchConfig, MoESpec
+from .sharding import ax, constrain
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+# ---------------------------------------------------------------- rmsnorm
+
+def rmsnorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": ax(".")}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    x32 = x32 * lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * p["scale"]).astype(dt)
+
+
+# ------------------------------------------------------------------ rope
+
+def rope(x, positions, theta):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention
+
+def attention_init(key, cfg: ArchConfig):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (d, h, hd)),
+        "wk": _init(ks[1], (d, kv, hd)),
+        "wv": _init(ks[2], (d, kv, hd)),
+        "wo": _init(ks[3], (h, hd, d), scale=1.0 / math.sqrt(h * hd)),
+    }
+    a = {
+        "wq": ax("embed", "heads", "head_dim"),
+        "wk": ax("embed", "kv_heads", "head_dim"),
+        "wv": ax("embed", "kv_heads", "head_dim"),
+        "wo": ax("heads", "head_dim", "embed"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"], a["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"], a["k_norm"] = rmsnorm_init(hd)
+    return p, a
+
+
+def _attn_mask(sq, skv, *, causal: bool, swa: int | None, q_offset=0):
+    """(sq, skv) boolean mask. q_offset = absolute position of query 0."""
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    m = jnp.ones((sq, skv), bool)
+    if causal:
+        m &= kpos <= qpos
+    if swa is not None:
+        m &= kpos > qpos - swa
+    return m
+
+
+_QCHUNK_THRESHOLD = 8192  # above this, query-chunk the S x S score matrix
+_QCHUNK = 2048
+
+
+def attention(p, x, cfg: ArchConfig, *, positions, kv_x=None, causal=True,
+              use_rope=True, mask=None):
+    """GQA attention. x: (B, S, d). kv_x for cross-attention.
+
+    Long sequences (32k prefill) are processed in query chunks so the
+    score buffer is (B, H, qchunk, S) instead of (B, H, S, S) -- the jnp
+    flash-attention analogue that keeps the 32k cells inside VMEM/HBM
+    budgets (EXPERIMENTS.md §Perf)."""
+    b, sq, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = h // kv
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions if kv_x is None else
+                 jnp.arange(src.shape[1])[None, :].repeat(b, 0), cfg.rope_theta)
+    qg = q.reshape(b, sq, kv, g, hd)
+    skv = src.shape[1]
+    swa = cfg.swa_window if kv_x is None else None
+
+    def block(q_blk, q_offset, blk_mask):
+        scores = jnp.einsum("bskgh,btkh->bkgst", q_blk, k,
+                            preferred_element_type=jnp.float32)
+        # Pin batch AND give the merged (kv,g) head dim a model-axis home:
+        # PartitionSpec can't split one mesh axis across the separate
+        # kv/g dims, and an unpinned score tensor lets GSPMD replicate
+        # batch when heads don't divide the axis (whisper: 48 GiB chunks).
+        # allow_uneven handles llava's 56 heads on 16 (pad, not replicate).
+        bq, sq_b = scores.shape[0], scores.shape[3]
+        skv_b = scores.shape[4]
+        merged = scores.reshape(bq, kv * g, sq_b, skv_b)
+        merged = constrain(merged, ax("act_batch", "act_heads", ".", "."),
+                           allow_uneven=True)
+        scores = merged.reshape(bq, kv, g, sq_b, skv_b)
+        scores = scores / math.sqrt(hd)
+        if blk_mask is not None:
+            scores = jnp.where(blk_mask, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        return jnp.einsum("bkgst,btkh->bskgh", w, v)
+
+    if sq >= _QCHUNK_THRESHOLD and mask is None and sq % _QCHUNK == 0:
+        nblk = sq // _QCHUNK
+        qg_b = qg.reshape(b, nblk, _QCHUNK, kv, g, hd)
+
+        def scan_fn(_, i):
+            q_blk = jax.lax.dynamic_index_in_dim(qg_b, i, axis=1,
+                                                 keepdims=False)
+            m = (_attn_mask(_QCHUNK, skv, causal=causal, swa=swa,
+                            q_offset=i * _QCHUNK)
+                 if (causal or swa) else None)
+            return None, block(q_blk, i * _QCHUNK, m)
+
+        _, outs = jax.lax.scan(scan_fn, None, jnp.arange(nblk))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, hd)
+    else:
+        if mask is None and (causal or swa):
+            mask = _attn_mask(sq, skv, causal=causal, swa=swa)
+        out = block(qg, 0, mask).reshape(b, sq, h, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+# ----------------------------------------------------------- swiglu mlp
+
+def mlp_init(key, cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_gate": _init(ks[0], (d, f)), "w_up": _init(ks[1], (d, f)),
+         "w_down": _init(ks[2], (f, d))}
+    a = {"w_gate": ax("embed", "ffn"), "w_up": ax("embed", "ffn"),
+         "w_down": ax("ffn", "embed")}
+    return p, a
+
+
+def mlp(p, x):
+    h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+    h = constrain(h, ax("act_batch", ".", "act_ffn"))
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# ------------------------------------------------------------------ moe
+
+def moe_init(key, cfg: ArchConfig):
+    d, spec = cfg.d_model, cfg.moe
+    e, fe = spec.n_experts, spec.d_expert
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _init(ks[0], (d, e)),
+        "w_gate": _init(ks[1], (e, d, fe)),
+        "w_up": _init(ks[2], (e, d, fe)),
+        "w_down": _init(ks[3], (e, fe, d), scale=1.0 / math.sqrt(fe)),
+    }
+    a = {
+        "router": ax("embed", "experts"),
+        "w_gate": ax("experts", "embed", "expert_ffn"),
+        "w_up": ax("experts", "embed", "expert_ffn"),
+        "w_down": ax("experts", "expert_ffn", "embed"),
+    }
+    return p, a
+
+
+_MOE_GROUPS = 32  # dispatch groups (GShard-style); shards over (pod, data)
+
+
+def _moe_group_count(t: int, e: int) -> int:
+    """Largest group count <= _MOE_GROUPS keeping >= 4*E tokens per group
+    (decode batches route globally; training shards into 32 groups)."""
+    g = _MOE_GROUPS
+    while g > 1 and (t // g) < 4 * e:
+        g //= 2
+    while t % g:
+        g //= 2
+    return max(g, 1)
+
+
+def moe(p, x, spec: MoESpec):
+    """Top-k token-choice MoE: GROUPED sort-based capacity dispatch.
+
+    GSPMD cannot partition a scatter/gather with arbitrary indices along
+    the scattered dim -- it all-gathers the operand (8 GiB/chip flat token
+    buffers on jamba, EXPERIMENTS.md D10).  GShard's fix, used here:
+    tokens split into G routing groups with per-group capacity; dispatch
+    gather/scatter become *batched* ops over the group dim, which GSPMD
+    partitions cleanly (groups -> data axis, experts -> model axis; the
+    expert einsum produces the EP all-to-alls).  Returns (y, aux_loss).
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = spec.n_experts, spec.top_k
+    g_cnt = _moe_group_count(t, e)
+    tg = t // g_cnt                              # tokens per group
+    c = max(4, int(spec.capacity_factor * tg * k / e))
+    xf = x.reshape(g_cnt, tg, d)
+    xf = constrain(xf, ax("act_moe_groups", ".", "."))
+
+    logits = (xf @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (G, Tg, E)
+    gate_vals, gate_idx = lax.top_k(probs, k)                # (G, Tg, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    flat_e = gate_idx.reshape(g_cnt, tg * k)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tg), k)[None], (g_cnt, tg * k))
+    flat_g = gate_vals.reshape(g_cnt, tg * k)
+
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, -1)
+    st = jnp.take_along_axis(flat_t, order, -1)
+    sg = jnp.take_along_axis(flat_g, order, -1)
+    counts = jnp.sum(jax.nn.one_hot(flat_e, e, dtype=jnp.int32), axis=1)
+    starts = jnp.cumsum(counts, -1) - counts                 # (G, E)
+    pos_in_e = jnp.arange(tg * k)[None] - jnp.take_along_axis(starts, se, -1)
+    keep = pos_in_e < c
+    slot = jnp.where(keep, se * c + pos_in_e, e * c)         # e*c = trash
+
+    table = jnp.full((g_cnt, e * c + 1), tg, jnp.int32)
+    table = table.at[jnp.arange(g_cnt)[:, None], slot].set(st, mode="drop")
+    gates = jnp.zeros((g_cnt, e * c + 1), jnp.float32)
+    gates = gates.at[jnp.arange(g_cnt)[:, None], slot].set(sg, mode="drop")
+    table, gates = table[:, :-1], gates[:, :-1]
+
+    # batched OOB-fill gather: (G, E*C, d), partitionable along G
+    xg = jax.vmap(lambda xrow, trow: xrow.at[trow].get(mode="fill",
+                                                       fill_value=0))(xf, table)
+    xg = constrain(xg, ax("act_moe_groups", ".", "."))
+    xe = xg.reshape(g_cnt, e, c, d)
+    xe = constrain(xe, ax("act_moe_groups", "act_experts", ".", "."))
+    h = (jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe,
+                                p["w_gate"].astype(x.dtype)))
+         * jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(x.dtype)))
+    h = constrain(h, ax("act_moe_groups", "act_experts", ".", "act_ffn"))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+    ye = constrain(ye, ax("act_moe_groups", "act_experts", ".", "."))
+    ye_flat = ye.reshape(g_cnt, e * c, d)
+
+    # batched OOB-drop combine scatter
+    yflat = jnp.zeros((g_cnt, tg, d), jnp.float32)
+    yflat = yflat.at[jnp.arange(g_cnt)[:, None], table].add(
+        ye_flat.astype(jnp.float32) * gates[..., None], mode="drop")
+    yflat = constrain(yflat, ax("act_moe_groups", ".", "."))
+    y = yflat.reshape(b, s, d).astype(x.dtype)
+
+    # switch-style load-balance aux loss (global across groups)
+    frac_tokens = jnp.sum(counts, 0).astype(jnp.float32) / (t * k)
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs) * spec.aux_loss_weight
+    return y, aux

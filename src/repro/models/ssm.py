@@ -1,0 +1,363 @@
+"""Recurrent blocks: Mamba (jamba hybrid) and xLSTM (mLSTM/sLSTM).
+
+Each block type ships three functions: init, a sequence-parallel train/
+prefill form, and a single-token decode step with explicit state (the
+"KV cache" analogue for SSMs -- constant-size, which is why these archs
+keep the `long_500k` cell that dense attention skips).
+
+Mamba uses a chunked selective scan (associative scan inside a chunk,
+lax.scan across chunks) so peak memory is O(B * chunk * d_in * N) instead
+of O(B * S * d_in * N).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ArchConfig
+from .layers import _init, rmsnorm, rmsnorm_init
+from .sharding import ax
+
+
+# ------------------------------------------------------------------ mamba
+
+def mamba_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_d_state
+    r = max(1, d // 16)  # dt rank
+    ks = jax.random.split(key, 7)
+    p = {
+        "in_proj": _init(ks[0], (d, 2 * d_in)),
+        "conv_w": _init(ks[1], (d_in, cfg.ssm_conv), scale=0.5),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "x_proj": _init(ks[2], (d_in, r + 2 * n)),
+        "dt_proj": _init(ks[3], (r, d_in), scale=1.0 / math.sqrt(r)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((d_in,), 0.01, jnp.float32))),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (d_in, 1))),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": _init(ks[4], (d_in, d), scale=1.0 / math.sqrt(d_in)),
+    }
+    a = {
+        "in_proj": ax("embed", "ssm_inner"),
+        "conv_w": ax("ssm_inner", "conv"),
+        "conv_b": ax("ssm_inner"),
+        "x_proj": ax("ssm_inner", "."),
+        "dt_proj": ax(".", "ssm_inner"),
+        "dt_bias": ax("ssm_inner"),
+        "a_log": ax("ssm_inner", "ssm_state"),
+        "d_skip": ax("ssm_inner"),
+        "out_proj": ax("ssm_inner", "embed"),
+    }
+    return p, a
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv along seq via shifted adds.
+
+    x: (B, S, d_in); w: (d_in, K).  conv_state: (B, K-1, d_in) history for
+    decode continuity (returns updated state)."""
+    k = w.shape[1]
+    if conv_state is None:
+        hist = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        hist = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)          # (B, S+K-1, d_in)
+    out = jnp.zeros_like(x)
+    s = x.shape[1]
+    for i in range(k):
+        out = out + xp[:, i:i + s, :] * w[:, i].astype(x.dtype)
+    new_state = xp[:, -(k - 1):, :] if k > 1 else hist
+    return out + b.astype(x.dtype), new_state
+
+
+def _ssm_scan_chunked(dt, a, b_mat, c_mat, x_c, h0, chunk: int):
+    """Fused chunked selective scan: y_t = C_t . h_t with
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t.
+
+    The (B, S, d_in, N) decay/input tensors are NEVER materialized at full
+    sequence length -- each checkpointed chunk step builds its own
+    (B, chunk, d_in, N) slice, runs an associative scan, and contracts to
+    y immediately.  Without this, one jamba mamba layer transiently held
+    2 x 17 GiB/chip at train_4k; with it, ~1 GiB (EXPERIMENTS.md §Perf).
+
+    dt, x_c: (B, S, d_in); b_mat, c_mat: (B, S, N); a: (d_in, N) fp32.
+    Returns (y (B, S, d_in) fp32, h_last (B, d_in, N))."""
+    b, s, d_in = dt.shape
+    n = a.shape[1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        zpad = lambda x_: jnp.concatenate(
+            [x_, jnp.zeros((b, pad) + x_.shape[2:], x_.dtype)], axis=1)
+        dt, x_c = zpad(dt), zpad(x_c)                # dt=0 -> decay=1, inp=0
+        b_mat, c_mat = zpad(b_mat), zpad(c_mat)
+    s_pad = s + pad
+    nchunks = s_pad // chunk
+
+    def to_chunks(x_):
+        return x_.reshape((b, nchunks, chunk) + x_.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, x_.ndim + 1)))
+
+    xs = (to_chunks(dt.astype(jnp.float32)), to_chunks(b_mat.astype(jnp.float32)),
+          to_chunks(c_mat.astype(jnp.float32)), to_chunks(x_c.astype(jnp.float32)))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def step(h, chunk_xs):
+        dt_c, b_c, c_c, x_cc = chunk_xs              # (B, chunk, ...)
+        decay = jnp.exp(dt_c[..., None] * a)         # (B, chunk, d_in, N)
+        inp = dt_c[..., None] * b_c[:, :, None, :] * x_cc[..., None]
+        a_cum, b_cum = lax.associative_scan(combine, (decay, inp), axis=1)
+        h_all = a_cum * h[:, None] + b_cum
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, c_c)
+        return h_all[:, -1], y
+
+    step = jax.checkpoint(step)
+    h_last, y_chunks = lax.scan(step, h0, xs)
+    y = y_chunks.transpose(1, 0, 2, 3).reshape(b, s_pad, d_in)
+    return y[:, :s], h_last
+
+
+def mamba_forward(p, x, cfg: ArchConfig, *, state=None):
+    """x: (B, S, d). state: None or (conv_state, ssm_state) for continuity.
+    Returns (y, new_state)."""
+    b, s, d = x.shape
+    n = cfg.ssm_d_state
+    d_in = cfg.ssm_expand * d
+    conv_state = state[0] if state is not None else None
+    h0 = (state[1] if state is not None
+          else jnp.zeros((b, d_in, n), jnp.float32))
+
+    xz = x @ p["in_proj"].astype(x.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c, new_conv = _causal_conv(x_in, p["conv_w"], p["conv_b"], conv_state)
+    x_c = jax.nn.silu(x_c)
+
+    dbc = x_c @ p["x_proj"].astype(x.dtype)
+    r = p["dt_proj"].shape[0]
+    dt_r, b_mat, c_mat = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(x.dtype)
+                         + p["dt_bias"].astype(x.dtype))      # (B,S,d_in)
+    a = -jnp.exp(p["a_log"])                                  # (d_in, N)
+
+    y, h_last = _ssm_scan_chunked(dt, a, b_mat, c_mat, x_c, h0,
+                                  cfg.mamba_chunk)
+    y = y.astype(x.dtype)
+    y = y + p["d_skip"].astype(x.dtype) * x_c
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, (new_conv, h_last)
+
+
+def mamba_decode_step(p, x, cfg: ArchConfig, state):
+    """x: (B, 1, d) -> (y (B,1,d), new_state)."""
+    return mamba_forward(p, x, cfg, state=state)
+
+
+def mamba_init_state(b, cfg: ArchConfig, dtype=jnp.bfloat16):
+    d_in = cfg.ssm_expand * cfg.d_model
+    return (jnp.zeros((b, cfg.ssm_conv - 1, d_in), dtype),
+            jnp.zeros((b, d_in, cfg.ssm_d_state), jnp.float32))
+
+
+def _checkpointed_seq_scan(step, carry, xs, chunk: int):
+    """lax.scan over time with per-chunk jax.checkpoint.
+
+    Sequential recurrences (mLSTM matrix memory, sLSTM) save their carry
+    at EVERY step under plain autodiff -- 275 TB for xlstm-1.3b at
+    train_4k.  Chunked checkpointing stores only chunk-boundary states and
+    recomputes inside a chunk (S/chunk boundaries + chunk-transient).
+    xs: pytree, leading dim = time.  Falls back to one unchunked scan when
+    the length is not a chunk multiple (CPU smoke shapes)."""
+    s = jax.tree.leaves(xs)[0].shape[0]
+    if chunk >= s or s % chunk != 0:
+        return lax.scan(step, carry, xs)
+    nchunks = s // chunk
+    xs_c = jax.tree.map(
+        lambda a_: a_.reshape((nchunks, chunk) + a_.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk_fn(c, cxs):
+        return lax.scan(step, c, cxs)
+
+    carry, ys_c = lax.scan(chunk_fn, carry, xs_c)
+    ys = jax.tree.map(
+        lambda a_: a_.reshape((s,) + a_.shape[2:]), ys_c)
+    return carry, ys
+
+
+_MLSTM_CHUNK = 64
+_SLSTM_CHUNK = 256
+
+
+# ------------------------------------------------------------------ mlstm
+
+def mlstm_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    h = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    p = {
+        "up_proj": _init(ks[0], (d, 2 * d_in)),
+        "wq": _init(ks[1], (d_in, d_in)),
+        "wk": _init(ks[2], (d_in, d_in)),
+        "wv": _init(ks[3], (d_in, d_in)),
+        "w_igate": _init(ks[4], (d_in, h), scale=0.01),
+        "w_fgate": _init(ks[5], (d_in, h), scale=0.01),
+        "b_igate": jnp.zeros((h,), jnp.float32),
+        "b_fgate": jnp.full((h,), 3.0, jnp.float32),  # forget-bias init
+        "out_norm": jnp.ones((d_in,), jnp.float32),
+        "down_proj": _init(ks[6], (d_in, d), scale=1.0 / math.sqrt(d_in)),
+    }
+    a = {
+        "up_proj": ax("embed", "ssm_inner"),
+        "wq": ax("ssm_inner", "."), "wk": ax("ssm_inner", "."),
+        "wv": ax("ssm_inner", "."),
+        "w_igate": ax("ssm_inner", "heads"), "w_fgate": ax("ssm_inner", "heads"),
+        "b_igate": ax("heads"), "b_fgate": ax("heads"),
+        "out_norm": ax("ssm_inner"),
+        "down_proj": ax("ssm_inner", "embed"),
+    }
+    return p, a
+
+
+def _mlstm_scan(q, k, v, ig, fg, state):
+    """Stabilized exponential-gating matrix-memory recurrence.
+
+    q,k,v: (B, S, H, hd); ig,fg: (B, S, H) log-space gates.
+    state: (C (B,H,hd,hd), n (B,H,hd), m (B,H)).  Sequential lax.scan --
+    one HLO while loop, compile-cheap; see DESIGN.md for the chunked
+    alternative considered in the perf log."""
+    def step(carry, xs):
+        c_mat, n_vec, m = carry
+        qt, kt, vt, igt, fgt = xs                     # (B,H,hd)x3, (B,H)x2
+        m_new = jnp.maximum(fgt + m, igt)
+        fprime = jnp.exp(fgt + m - m_new)[..., None]
+        iprime = jnp.exp(igt - m_new)[..., None]
+        c_new = (c_mat * fprime[..., None]
+                 + iprime[..., None] * kt[..., :, None] * vt[..., None, :])
+        n_new = n_vec * fprime + iprime * kt
+        denom = jnp.maximum(
+            jnp.abs(jnp.sum(n_new * qt, axis=-1, keepdims=True)), 1.0)
+        h = jnp.einsum("bhij,bhi->bhj", c_new, qt) / denom
+        return (c_new, n_new, m_new), h
+
+    qs = jnp.moveaxis(q, 1, 0)
+    ks_ = jnp.moveaxis(k, 1, 0)
+    vs = jnp.moveaxis(v, 1, 0)
+    igs = jnp.moveaxis(ig, 1, 0)
+    fgs = jnp.moveaxis(fg, 1, 0)
+    state, hs = _checkpointed_seq_scan(step, state, (qs, ks_, vs, igs, fgs),
+                                       _MLSTM_CHUNK)
+    return jnp.moveaxis(hs, 0, 1), state              # (B,S,H,hd)
+
+
+def mlstm_forward(p, x, cfg: ArchConfig, *, state=None):
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * d
+    h = cfg.n_heads
+    hd = d_in // h
+    if state is None:
+        state = mlstm_init_state(b, cfg)
+
+    xz = x @ p["up_proj"].astype(x.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    q = (x_in @ p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (x_in @ p["wk"].astype(x.dtype)).reshape(b, s, h, hd) / math.sqrt(hd)
+    v = (x_in @ p["wv"].astype(x.dtype)).reshape(b, s, h, hd)
+    ig = (x_in @ p["w_igate"].astype(x.dtype)).astype(jnp.float32) + p["b_igate"]
+    fg = jax.nn.log_sigmoid(
+        (x_in @ p["w_fgate"].astype(x.dtype)).astype(jnp.float32) + p["b_fgate"])
+
+    hs, state = _mlstm_scan(q.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), ig, fg, state)
+    hs = hs.astype(x.dtype).reshape(b, s, d_in)
+    hs = rmsnorm({"scale": p["out_norm"]}, hs, cfg.norm_eps)
+    out = (hs * jax.nn.silu(z)) @ p["down_proj"].astype(x.dtype)
+    return out, state
+
+
+def mlstm_init_state(b, cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = cfg.n_heads
+    hd = d_in // h
+    return (jnp.zeros((b, h, hd, hd), jnp.float32),
+            jnp.zeros((b, h, hd), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32))
+
+
+# ------------------------------------------------------------------ slstm
+
+def slstm_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": _init(ks[0], (d, 4 * d)),             # z, i, f, o pre-acts
+        "r": _init(ks[1], (h, hd, 4 * hd), scale=1.0 / math.sqrt(hd)),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)),
+                              jnp.full((d,), 3.0), jnp.zeros((d,))]).astype(jnp.float32),
+        "out_proj": _init(ks[2], (d, d)),
+    }
+    a = {
+        "w_in": ax("embed", "."),
+        "r": ax("heads", "head_dim", "."),
+        "b": ax("."),
+        "out_proj": ax("embed", "embed_no_fsdp"),
+    }
+    return p, a
+
+
+def slstm_forward(p, x, cfg: ArchConfig, *, state=None):
+    """Scalar-memory LSTM with exponential gating + block-diagonal
+    recurrence (one head = one block).  Sequential over S by definition
+    (the recurrence is non-associative)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    if state is None:
+        state = slstm_init_state(b, cfg)
+
+    pre = (x @ p["w_in"].astype(x.dtype)).astype(jnp.float32) + p["b"]
+
+    def step(carry, pre_t):
+        c, n, hprev, m = carry                       # (B, H, hd) x3, (B,H,hd)
+        rec = jnp.einsum("bhi,hij->bhj", hprev, p["r"])   # (B, H, 4*hd)
+        # pre_t: (B, 4d) laid out [z | i | f | o]; regroup per head
+        pre_h = pre_t.reshape(b, 4, h, hd).transpose(0, 2, 1, 3).reshape(
+            b, h, 4 * hd)
+        zi, ii, fi, oi = jnp.split(pre_h, 4, axis=-1)
+        zr, ir, fr, orr = jnp.split(rec, 4, axis=-1)
+        zt = jnp.tanh(zi + zr)
+        it = ii + ir
+        ft = fi + fr
+        ot = jax.nn.sigmoid(oi + orr)
+        m_new = jnp.maximum(ft + m, it)
+        iprime = jnp.exp(it - m_new)
+        fprime = jnp.exp(ft + m - m_new)
+        c_new = fprime * c + iprime * zt
+        n_new = fprime * n + iprime
+        h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    pres = jnp.moveaxis(pre, 1, 0)                    # (S, B, 4d)
+    state, hs = _checkpointed_seq_scan(step, state, pres, _SLSTM_CHUNK)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    return hs @ p["out_proj"].astype(x.dtype), state
+
+
+def slstm_init_state(b, cfg: ArchConfig):
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    z = lambda: jnp.zeros((b, h, hd), jnp.float32)
+    return (z(), z(), z(), jnp.full((b, h, hd), -1e30, jnp.float32))

@@ -1,0 +1,251 @@
+"""Full-model init + forward for every assigned architecture family.
+
+Layers are grouped into cycles (config.block_pattern); per-cycle params are
+stacked on a leading "cycles" axis (vmap over init keys) and the forward
+pass lax.scans over them -- one compiled cycle body regardless of depth,
+which keeps the 512-way SPMD dry-run compile tractable.
+
+Families:
+  dense/moe/vlm : decoder-only LM (vlm prepends stub patch embeddings)
+  ssm           : xLSTM (alternating mLSTM/sLSTM cycles)
+  hybrid        : jamba (attn + 7x mamba per cycle, MoE every other layer)
+  audio         : whisper enc-dec (stub frame embeddings into the encoder)
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ArchConfig
+from .layers import (_init, attention, attention_init, mlp, mlp_init, moe,
+                     moe_init, rmsnorm, rmsnorm_init)
+from .sharding import ax, constrain
+from .ssm import (mamba_forward, mamba_init, mlstm_forward, mlstm_init,
+                  slstm_forward, slstm_init)
+
+_INNER_INIT = {"attn": attention_init, "mamba": mamba_init,
+               "mlstm": mlstm_init, "slstm": slstm_init}
+
+
+def _block_init(key, cfg: ArchConfig, idx_in_pattern: int, *, cross=False):
+    bt = cfg.block_pattern[idx_in_pattern % len(cfg.block_pattern)]
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["norm1"], a["norm1"] = rmsnorm_init(cfg.d_model)
+    p["inner"], a["inner"] = _INNER_INIT[bt](ks[0], cfg)
+    if cross:
+        p["norm_x"], a["norm_x"] = rmsnorm_init(cfg.d_model)
+        p["cross"], a["cross"] = attention_init(ks[1], cfg)
+    has_ffn = bt in ("attn", "mamba") and (cfg.layer_is_moe(idx_in_pattern)
+                                           or cfg.d_ff > 0)
+    if has_ffn:
+        p["norm2"], a["norm2"] = rmsnorm_init(cfg.d_model)
+        if cfg.layer_is_moe(idx_in_pattern):
+            p["ffn_moe"], a["ffn_moe"] = moe_init(ks[2], cfg)
+        else:
+            p["ffn"], a["ffn"] = mlp_init(ks[2], cfg)
+    return p, a
+
+
+def _apply_block(p, x, cfg: ArchConfig, bt: str, *, positions, state=None,
+                 enc_out=None, causal=True):
+    """One block: mixer + optional FFN, pre-norm residuals.
+    Returns (x, aux_loss, new_state)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if bt == "attn":
+        out = attention(p["inner"], h, cfg, positions=positions, causal=causal)
+        new_state = None
+    elif bt == "mamba":
+        out, new_state = mamba_forward(p["inner"], h, cfg, state=state)
+    elif bt == "mlstm":
+        out, new_state = mlstm_forward(p["inner"], h, cfg, state=state)
+    elif bt == "slstm":
+        out, new_state = slstm_forward(p["inner"], h, cfg, state=state)
+    else:
+        raise ValueError(bt)
+    x = x + out
+    if "cross" in p:
+        h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        out = attention(p["cross"], h, cfg, positions=positions,
+                        kv_x=enc_out, causal=False, use_rope=False)
+        x = x + out
+    if "ffn_moe" in p:
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        out, aux = moe(p["ffn_moe"], h, cfg.moe)
+        x = x + out
+    elif "ffn" in p:
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + mlp(p["ffn"], h)
+    return x, aux, new_state
+
+
+# --------------------------------------------------------------- init
+
+def init_lm(key, cfg: ArchConfig):
+    """Returns (params, logical_axes)."""
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["embed"] = _init(ks[0], (cfg.vocab, cfg.d_model), scale=0.02)
+    a["embed"] = ax("vocab", "embed")
+    if not cfg.tie_embeddings:
+        p["unembed"] = _init(ks[1], (cfg.d_model, cfg.vocab))
+        a["unembed"] = ax("embed", "vocab")
+    p["final_norm"], a["final_norm"] = rmsnorm_init(cfg.d_model)
+
+    def one_cycle(k):
+        kk = jax.random.split(k, len(cfg.block_pattern))
+        ps, as_ = {}, {}
+        for i in range(len(cfg.block_pattern)):
+            ps[f"b{i}"], as_[f"b{i}"] = _block_init(kk[i], cfg, i)
+        return ps, as_
+
+    cyc_keys = jax.random.split(ks[2], cfg.n_cycles)
+    stacked = jax.vmap(lambda k: one_cycle(k)[0])(cyc_keys)
+    _, cyc_axes = one_cycle(ks[2])
+    p["cycles"] = stacked
+    a["cycles"] = jax.tree.map(lambda s: "cycles " + s, cyc_axes)
+
+    if cfg.enc_dec:
+        # whisper: encoder cycles (bidirectional attn blocks) + decoder cross
+        def enc_cycle(k):
+            return _block_init(k, cfg, 0)  # "attn" pattern block
+
+        assert cfg.block_pattern == ("attn",)
+        enc_keys = jax.random.split(ks[3], cfg.n_enc_layers)
+        p["enc_cycles"] = jax.vmap(lambda k: enc_cycle(k)[0])(enc_keys)
+        _, ea = enc_cycle(ks[3])
+        a["enc_cycles"] = jax.tree.map(lambda s: "cycles " + s, ea)
+        p["enc_norm"], a["enc_norm"] = rmsnorm_init(cfg.d_model)
+        # decoder cycles get a cross-attention sub-block: rebuild
+        def dec_cycle(k):
+            ps, as_ = {}, {}
+            ps["b0"], as_["b0"] = _block_init(k, cfg, 0, cross=True)
+            return ps, as_
+        dec_keys = jax.random.split(ks[4], cfg.n_cycles)
+        p["cycles"] = jax.vmap(lambda k: dec_cycle(k)[0])(dec_keys)
+        _, da = dec_cycle(ks[4])
+        a["cycles"] = jax.tree.map(lambda s: "cycles " + s, da)
+    if cfg.frontend == "vision_stub":
+        # anyres projector stub: patch embeddings arrive pre-projected; a
+        # single linear adapter stands in for the vision tower output head
+        p["vision_adapter"] = _init(ks[5], (cfg.d_model, cfg.d_model))
+        a["vision_adapter"] = ax("embed", "embed_no_fsdp")
+    return p, a
+
+
+# ------------------------------------------------------------- forward
+
+def _sinusoid(positions, d):
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def encode(params, frames, cfg: ArchConfig, *, compute_dtype=jnp.bfloat16):
+    """Whisper encoder over stub frame embeddings (B, F, d)."""
+    b, f, _ = frames.shape
+    x = frames.astype(compute_dtype)
+    x = x + _sinusoid(jnp.arange(f), cfg.d_model).astype(compute_dtype)
+    positions = jnp.arange(f)[None, :].repeat(b, 0)
+
+    def cycle_fn(x, cyc):
+        x, _, _ = _apply_block(cyc, x, cfg, "attn",
+                               positions=positions, causal=False)
+        return x, None
+
+    fn = jax.checkpoint(cycle_fn) if cfg.remat else cycle_fn
+    x, _ = lax.scan(fn, x, params["enc_cycles"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward_lm(params, tokens, cfg: ArchConfig, *, extra_embeds=None,
+               enc_out=None, compute_dtype=jnp.bfloat16):
+    """tokens: (B, S) int32 -> logits (B, S_total, vocab) fp32, aux loss.
+
+    extra_embeds: (B, P, d) stub patch/frame embeddings prepended (vlm).
+    enc_out: (B, F, d) encoder memory for enc-dec cross attention.
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(compute_dtype)
+    if extra_embeds is not None:
+        pe = extra_embeds.astype(compute_dtype)
+        if "vision_adapter" in params:
+            pe = pe @ params["vision_adapter"].astype(compute_dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    s_tot = x.shape[1]
+    positions = jnp.arange(s_tot)[None, :].repeat(b, 0)
+
+    def cycle_fn(carry, cyc):
+        x, aux = carry
+        x = constrain(x, ax("act_batch", ".", "."))
+        for i, bt in enumerate(cfg.block_pattern):
+            x, aux_i, _ = _apply_block(cyc[f"b{i}"], x, cfg, bt,
+                                       positions=positions, enc_out=enc_out)
+            aux = aux + aux_i
+        x = constrain(x, ax("act_batch", ".", "."))
+        return (x, aux), None
+
+    carry0 = (x, jnp.zeros((), jnp.float32))
+    group = cfg.remat_group if cfg.remat else 1
+    if group > 1 and cfg.n_cycles % group == 0:
+        # 2-level NESTED remat: the outer scan saves n_cycles/group
+        # carries; each inner cycle is checkpointed too, so the inner
+        # backward holds one cycle's intermediates at a time (without the
+        # inner checkpoint the rematted recompute stacks `group` cycles of
+        # full intermediates -- measured +23 GiB on llama3.2-1b).
+        outer = cfg.n_cycles // group
+        re_params = jax.tree.map(
+            lambda a: a.reshape((outer, group) + a.shape[1:]),
+            params["cycles"])
+        inner_fn = jax.checkpoint(cycle_fn) if cfg.remat else cycle_fn
+
+        def outer_fn(carry, chunk):
+            carry, _ = lax.scan(inner_fn, carry, chunk)
+            return carry, None
+
+        fn = jax.checkpoint(outer_fn) if cfg.remat else outer_fn
+        (x, aux), _ = lax.scan(fn, carry0, re_params)
+    else:
+        fn = jax.checkpoint(cycle_fn) if cfg.remat else cycle_fn
+        (x, aux), _ = lax.scan(fn, carry0, params["cycles"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"]).astype(compute_dtype)
+    logits = (x @ unembed).astype(jnp.float32)
+    logits = constrain(logits, ax("act_batch", ".", "act_vocab"))
+    return logits, aux
+
+
+def lm_loss(params, batch, cfg: ArchConfig, *, compute_dtype=jnp.bfloat16):
+    """Next-token CE + MoE aux.  batch: {tokens, labels, [patches|frames]}."""
+    enc_out = None
+    extra = None
+    if cfg.enc_dec:
+        enc_out = encode(params, batch["frames"], cfg,
+                         compute_dtype=compute_dtype)
+    if cfg.frontend == "vision_stub":
+        extra = batch["patches"]
+    logits, aux = forward_lm(params, batch["tokens"], cfg, extra_embeds=extra,
+                             enc_out=enc_out, compute_dtype=compute_dtype)
+    labels = batch["labels"]
+    if extra is not None:
+        logits = logits[:, -labels.shape[1]:]  # loss only on the text part
+    # Vocab-sharding-safe CE: log_softmax reduces over the (model-sharded)
+    # vocab dim and the label pick is a one-hot contraction -- GSPMD lowers
+    # both to cheap (B, S) all-reduces instead of all-gathering the
+    # (B, S, V) logits (which peaked at 141 GiB/chip; EXPERIMENTS.md §Perf).
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    onehot = jax.nn.one_hot(safe, logits.shape[-1], dtype=logp.dtype)
+    nll = -jnp.einsum("bsv,bsv->bs", logp, onehot)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux, {"ce": loss, "aux": aux}

@@ -1,0 +1,69 @@
+"""In-house AdamW with decoupled weight decay and global-norm clipping.
+
+fp32 master weights and moments; gradients may arrive bf16 (cast up).
+State is a plain pytree so checkpointing/resharding handles it like params.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params, *, moment_dtype=jnp.float32):
+    """moment_dtype=bf16 halves first-moment memory (the production lever
+    that fits grok-1-314b fp32 master + Adam inside 16 GB/chip)."""
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+           weight_decay=0.1, clip_norm=1.0):
+    """One AdamW step. lr may be a scalar or a step -> lr callable."""
+    step = state["step"] + 1
+    if callable(lr):
+        lr = lr(step)
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, clip_norm)
+
+    m = jax.tree.map(lambda m_, g: (b1 * m_.astype(jnp.float32)
+                                    + (1 - b1) * g).astype(m_.dtype),
+                     state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        mhat = m_.astype(jnp.float32) / bc1
+        vhat = v_ / bc2
+        return (p - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                          + weight_decay * p)).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}, gnorm
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

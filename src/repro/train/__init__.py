@@ -1,0 +1,1 @@
+from .train_step import TrainConfig, init_train_state, make_train_step

@@ -1,0 +1,31 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here -- tests see 1 CPU device;
+only launch/dryrun.py forces 512 placeholder devices."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.covariance import make_dataset
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    """n=256 medium-correlation exponential-kernel dataset, Morton ordered."""
+    key = jax.random.PRNGKey(7)
+    return make_dataset(key, 256, [1.0, 0.1, 0.5], nu_static=0.5)
+
+
+@pytest.fixture(scope="session")
+def small_cov(small_dataset):
+    from repro.core import build_covariance
+    return build_covariance(small_dataset.locs, small_dataset.theta0,
+                            nu_static=0.5, jitter=1e-5, dtype=jnp.float32)
+
+
+def spd_matrix(key, n, dtype=jnp.float32, cond=100.0):
+    """Random SPD matrix with controlled condition number."""
+    a = jax.random.normal(key, (n, n), dtype=jnp.float32)
+    q, _ = jnp.linalg.qr(a)
+    eigs = jnp.logspace(0, jnp.log10(cond), n)
+    return (q * eigs) @ q.T.astype(dtype)

