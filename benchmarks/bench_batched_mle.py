@@ -1,0 +1,105 @@
+"""Batched likelihood engine throughput vs the sequential path.
+
+The batched engine's claim: B likelihood evaluations as ONE device call
+(all tile ops carry a leading batch axis) beat B sequential jitted calls,
+because per-eval dispatch + host-sync overhead amortizes and the pairwise
+distance matrix is computed once per batch instead of once per candidate.
+The sequential baseline is the pre-engine optimizer loop from
+`core/mle.py`: one jitted call and one host sync per candidate
+(`BatchEngine.loglik_sequential`).
+
+Timing interleaves the two paths (min over rounds) so background load
+drift on a shared box hits both equally.  Large batches run chunked
+(`BatchPlan.chunk_size`) so the B x n x n covariance stacks stay
+cache-resident.
+
+  PYTHONPATH=src python -m benchmarks.run batch
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BatchEngine, BatchPlan, PrecisionPolicy
+from repro.covariance import make_dataset
+
+from .common import emit
+
+N = 256
+NB = 16
+CHUNK = 16
+BATCH_SIZES = (1, 2, 4, 8, 16, 32)
+ROUNDS = 8
+
+
+def candidate_thetas(b: int):
+    """Deterministic log-spaced candidates around the true parameters."""
+    t1 = np.geomspace(0.5, 2.0, b)
+    t2 = np.geomspace(0.04, 0.3, b)
+    nu = np.full(b, 0.5)
+    return jnp.asarray(np.stack([t1, t2, nu], axis=-1), dtype=jnp.float32)
+
+
+def policies(p: int):
+    t = max(2, p // 4)
+    return {
+        "full": PrecisionPolicy.full(jnp.float32),
+        # TPU-native pair (bf16 off-band); bf16 is emulated on CPU, which
+        # slows BOTH paths equally, so the speedup ratio stays meaningful
+        "mixed": PrecisionPolicy.tpu(t),
+        # fp32/fp32 pair: the paper's hi/lo structure with both tiers fp32
+        # (x64-free CPU stand-in) -- the row the ll-agreement check targets
+        "mixed_fp32": PrecisionPolicy(mode="mixed", hi=jnp.float32,
+                                      lo=jnp.float32, diag_thick=t),
+        "dst": PrecisionPolicy.dst(t),
+    }
+
+
+def _interleaved_min(fn_a, fn_b, rounds=ROUNDS):
+    """min wall-clock seconds of each fn, alternating A/B per round."""
+    ta, tb = [], []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        fn_a()
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        tb.append(time.perf_counter() - t0)
+    return min(ta), min(tb)
+
+
+def run(n: int = N, nb: int = NB, batch_sizes=BATCH_SIZES, chunk: int = CHUNK):
+    ds = make_dataset(jax.random.PRNGKey(11), n, [1.0, 0.1, 0.5],
+                      nu_static=0.5)
+    rows = []
+    for name, pol in policies(n // nb).items():
+        engine = BatchEngine(ds.locs, ds.z,
+                             BatchPlan(policy=pol, nb=nb, nu_static=0.5,
+                                       chunk_size=chunk))
+        for b in batch_sizes:
+            thetas = candidate_thetas(b)
+
+            def seq(ths=thetas):
+                return engine.loglik_sequential(ths)
+
+            def bat(ths=thetas):
+                return jax.block_until_ready(engine.loglik(ths))
+
+            ll_seq = np.asarray(seq(), dtype=np.float64)   # also warmup
+            ll_bat = np.asarray(bat(), dtype=np.float64)
+            t_seq, t_bat = _interleaved_min(seq, bat)
+            eps_seq = b / t_seq
+            eps_bat = b / t_bat
+            rel = float(np.max(np.abs(ll_bat - ll_seq) / np.abs(ll_seq)))
+            emit(f"batch/{name}/B{b}", t_bat * 1e6,
+                 f"seq_evals_per_s={eps_seq:.1f};bat_evals_per_s={eps_bat:.1f};"
+                 f"speedup={eps_bat / eps_seq:.2f}x;max_rel_diff={rel:.2e}")
+            rows.append((name, b, eps_seq, eps_bat, rel))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

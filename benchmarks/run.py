@@ -7,6 +7,7 @@
   fig7   Monte-Carlo parameter-estimation accuracy
   fig8   k-fold PMSE per precision variant
   table1 wind-speed (WRF-like) regions: estimation + PMSE
+  batch  batched likelihood engine throughput vs sequential path
   lm     40-cell (arch x shape) roofline table
   kernels Pallas kernel correctness/footprint summary
 
@@ -18,10 +19,10 @@ import traceback
 
 
 def main() -> None:
-    from . import (bench_fig4_shared_memory, bench_fig5_data_movement,
-                   bench_fig6_scalability, bench_fig7_estimation,
-                   bench_fig8_pmse, bench_kernels, bench_lm_roofline,
-                   bench_table1_real)
+    from . import (bench_batched_mle, bench_fig4_shared_memory,
+                   bench_fig5_data_movement, bench_fig6_scalability,
+                   bench_fig7_estimation, bench_fig8_pmse, bench_kernels,
+                   bench_lm_roofline, bench_table1_real)
 
     suites = {
         "fig4": bench_fig4_shared_memory.run,
@@ -30,6 +31,7 @@ def main() -> None:
         "fig7": bench_fig7_estimation.run,
         "fig8": bench_fig8_pmse.run,
         "table1": bench_table1_real.run,
+        "batch": bench_batched_mle.run,
         "lm": bench_lm_roofline.run,
         "kernels": bench_kernels.run,
     }

@@ -1,0 +1,303 @@
+"""Batched mixed-precision likelihood engine (vmap-first, DESIGN.md Sec. 4).
+
+The paper's hot path is repeated evaluation of the Gaussian log-likelihood:
+one mixed-precision tile Cholesky per candidate parameter vector theta.
+ExaGeoStat amortizes that kernel across an optimization run with StarPU
+task-level concurrency; the jax_pallas analogue is to evaluate *many*
+candidate thetas at once so every tile op (POTRF/TRSM/SYRK/GEMM) runs with a
+leading batch axis and the accelerator never drains between factorizations.
+
+This module plans such a batch:
+
+  * `BatchPlan`   -- what one batch looks like: ONE `PrecisionPolicy` for the
+                     whole batch, tile size, evaluation path ("tile" = the
+                     faithful Algorithm-1 engine, "panel" = the banded
+                     performance path), and an optional chunk size that bounds
+                     peak memory (`lax.map` over chunks of `vmap`-width work).
+  * `BatchEngine` -- jit-compiled batched log-likelihood and batched kriging
+                     PMSE over a (B, 3) stack of candidate thetas.
+  * `BatchResult` -- per-candidate log-likelihoods (+ optional PMSE) and the
+                     batch argmax.
+
+The tile path exploits the *native* leading-batch support in
+`covariance/matern.py`, `core/tile_cholesky.py`, `core/likelihood.py` and
+`core/kriging.py` (no vmap needed -- tile ops are themselves batched); the
+panel path wraps `geostat_loglik_step` in `jax.vmap`.  Chunking matters when
+B x n x n covariance stacks would not fit memory: chunks run sequentially
+under `lax.map`, candidates inside a chunk run batched.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..covariance.matern import matern_covariance
+from .kriging import krige_from_factor, krige_pmse, pmse
+from .likelihood import loglik_from_factor, make_factor_fn, make_loglik
+from .panel_cholesky import geostat_loglik_step
+from .precision import PrecisionPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """How a batch of candidate thetas is evaluated.
+
+    One policy per batch: all candidates share the precision policy (and
+    hence one compiled program), matching the paper's setup where the
+    precision variant is fixed for a whole optimization run.
+    """
+    policy: PrecisionPolicy
+    nb: int = 128                     # tile size
+    chunk_size: Optional[int] = None  # None = one vmap over the whole batch
+    path: str = "tile"                # "tile" | "panel"
+    nu_static: Optional[float] = None
+    metric: str = "euclidean"
+    nugget: float = 0.0
+    jitter: float = 1e-6
+    profiled: bool = False
+    use_tiles: Optional[bool] = None  # tile path only
+    off_update: str = "square"        # panel path only
+
+    def __post_init__(self):
+        if self.path not in ("tile", "panel"):
+            raise ValueError(f"unknown path {self.path!r}")
+        if self.path == "panel" and self.policy.mode == "dst":
+            raise ValueError("panel path has no DST variant")
+        if self.path == "panel" and (self.nugget or self.profiled
+                                     or self.use_tiles is not None):
+            raise ValueError(
+                "panel path supports neither nugget, profiled, nor "
+                "use_tiles -- use path='tile' for those")
+        if self.chunk_size is not None and self.chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1")
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """Per-candidate outputs of one batched evaluation."""
+    thetas: np.ndarray                 # (B, d)
+    logliks: np.ndarray                # (B,)
+    pmse: Optional[np.ndarray] = None  # (B,) if the plan scored kriging
+
+    @property
+    def best_index(self) -> int:
+        finite = np.isfinite(self.logliks)
+        if not np.any(finite):
+            raise ValueError(
+                "every candidate log-likelihood in the batch is non-finite; "
+                "the covariance is likely not SPD anywhere in the candidate "
+                "set -- there is no meaningful best_theta")
+        ll = np.where(finite, self.logliks, -np.inf)
+        return int(np.argmax(ll))
+
+    @property
+    def best_theta(self) -> np.ndarray:
+        return self.thetas[self.best_index]
+
+    @property
+    def best_loglik(self) -> float:
+        return float(self.logliks[self.best_index])
+
+
+def chunked(fn: Callable, chunk_size: Optional[int] = None) -> Callable:
+    """Wrap a batched fn (leading axis B) to process B in fixed-size chunks.
+
+    The batch is padded (repeating the last element) to a chunk multiple,
+    reshaped to (num_chunks, chunk_size, ...), and fed through `lax.map`,
+    so peak memory is one chunk's worth while each chunk stays fully
+    batched.  With chunk_size=None (or >= B) this is `fn` itself.
+    """
+    if chunk_size is None:
+        return fn
+
+    def run(x):
+        b = x.shape[0]
+        if b <= chunk_size:
+            return fn(x)
+        pad = (-b) % chunk_size
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.broadcast_to(x[-1:], (pad,) + x.shape[1:])])
+        xc = x.reshape(-1, chunk_size, *x.shape[1:])
+        out = jax.lax.map(fn, xc)
+        return jax.tree_util.tree_map(
+            lambda o: o.reshape((-1,) + o.shape[2:])[:b], out)
+
+    return run
+
+
+class BatchEngine:
+    """Batched log-likelihood (+ kriging PMSE) over candidate thetas.
+
+    >>> engine = BatchEngine(locs, z, BatchPlan(policy, nb=32, nu_static=0.5))
+    >>> ll = engine.loglik(thetas)          # (B,) from (B, 3), one jit call
+    >>> res = engine.evaluate(thetas)       # BatchResult with argmax
+
+    Prediction scoring is enabled by passing held-out locations/truth:
+
+    >>> engine = BatchEngine(locs, z, plan, locs_new=s_new, y_true=y)
+    >>> res = engine.evaluate(thetas)       # res.pmse per candidate
+    """
+
+    def __init__(self, locs, z, plan: BatchPlan, *, locs_new=None, y_true=None):
+        self.plan = plan
+        self.locs = jnp.asarray(locs)
+        self.z = jnp.asarray(z)
+        self.locs_new = None if locs_new is None else jnp.asarray(locs_new)
+        self.y_true = None if y_true is None else jnp.asarray(y_true)
+
+        single = self._build_single_loglik()
+        batched = self._batch(single)
+        self._loglik_single = jax.jit(single)
+        self._loglik_batch = jax.jit(chunked(batched, plan.chunk_size))
+
+        self._pmse_batch = None
+        self._eval_batch = None
+        if self.locs_new is not None:
+            if self.y_true is None:
+                raise ValueError("y_true is required when locs_new is given")
+            if plan.profiled:
+                raise ValueError(
+                    "profiled plans take (theta2, theta3) candidates with "
+                    "the variance profiled out, which kriging cannot score; "
+                    "use a non-profiled plan (full thetas) with locs_new")
+            p = plan
+            pol = p.policy if p.policy.mode != "dst" \
+                else PrecisionPolicy.full(p.policy.hi)  # DST predicts densely
+            # DST's dense fallback must not inherit the tiled override
+            pmse_use_tiles = p.use_tiles if p.policy.mode != "dst" else None
+
+            # NOTE: kriging always factors Sigma_oo through the tile-path
+            # selection (krige -> make_factor_fn).  For path="panel" plans
+            # that means loglik and PMSE use different *numerical paths*
+            # over the SAME covariance model (the two factorizations agree
+            # to fp noise; tests assert tile/panel likelihood parity) --
+            # unlike nugget/profiled, nothing model-level diverges, so this
+            # is allowed rather than rejected.
+            def single_pmse(theta):
+                return krige_pmse(self.locs, self.z, self.locs_new,
+                                  self.y_true, theta, pol, nb=p.nb,
+                                  nu_static=p.nu_static, metric=p.metric,
+                                  nugget=p.nugget, jitter=p.jitter,
+                                  use_tiles=pmse_use_tiles)
+
+            self._pmse_batch = jax.jit(
+                chunked(self._batch(single_pmse), p.chunk_size))
+            if p.path == "tile" and p.policy.mode != "dst":
+                # fused program: the loglik factorization is reused for the
+                # kriging solves, halving the dominant O(B n^3) work of
+                # evaluate() (dst factors independent blocks and the panel
+                # path factors banded storage, so those fall back to the
+                # two separate programs; profiled+locs_new was rejected
+                # above)
+                self._eval_batch = jax.jit(
+                    chunked(self._build_single_eval(), p.chunk_size))
+
+    # ---- plumbing ------------------------------------------------------
+    def _build_single_loglik(self) -> Callable:
+        p = self.plan
+        if p.path == "panel":
+            def single(theta):
+                return geostat_loglik_step(
+                    self.locs, self.z, theta, nb=p.nb, policy=p.policy,
+                    nu_static=p.nu_static, metric=p.metric, jitter=p.jitter,
+                    off_update=p.off_update)
+            return single
+        return make_loglik(self.locs, self.z, p.policy, nb=p.nb,
+                           nu_static=p.nu_static, metric=p.metric,
+                           nugget=p.nugget, jitter=p.jitter,
+                           profiled=p.profiled, use_tiles=p.use_tiles)
+
+    def _build_single_eval(self) -> Callable:
+        """(.., 3) theta -> (loglik, pmse) sharing ONE factorization."""
+        p = self.plan
+        pol = p.policy
+        # the same factor builder make_loglik uses, so engine.loglik and
+        # the fused program can never select different covariance/factor
+        # paths for one plan
+        factor = make_factor_fn(self.locs, pol, nb=p.nb,
+                                nu_static=p.nu_static, metric=p.metric,
+                                nugget=p.nugget, jitter=p.jitter,
+                                use_tiles=p.use_tiles)
+
+        def single(theta):
+            theta = jnp.asarray(theta)
+            l = factor(theta)
+            ll = loglik_from_factor(l, self.z)
+            sigma_no = matern_covariance(
+                self.locs_new, self.locs, theta, nu_static=p.nu_static,
+                metric=p.metric).astype(pol.hi)
+            mu = krige_from_factor(l, self.z, sigma_no)
+            return ll, pmse(mu, self.y_true)
+
+        return single
+
+    def _batch(self, single: Callable) -> Callable:
+        # Tile-path functions are natively batched over theta's leading
+        # axes; the panel path's in-place banded updates index tiles by
+        # position, so it batches via vmap instead.
+        if self.plan.path == "panel":
+            return jax.vmap(single)
+        return single
+
+    def _prepare(self, thetas) -> jnp.ndarray:
+        """Normalize candidates to a (B, 3) stack.  When the plan pins the
+        smoothness (`nu_static`, non-profiled), (B, 2) candidates over
+        (variance, range) are accepted and the pinned nu column is appended
+        here -- callers don't have to plumb a dummy column themselves."""
+        thetas = jnp.atleast_2d(jnp.asarray(thetas))
+        if (thetas.shape[-1] == 2 and self.plan.nu_static is not None
+                and not self.plan.profiled):
+            nu = jnp.full(thetas.shape[:-1] + (1,), self.plan.nu_static,
+                          thetas.dtype)
+            thetas = jnp.concatenate([thetas, nu], axis=-1)
+        return thetas
+
+    # ---- public API ----------------------------------------------------
+    def loglik(self, thetas) -> jnp.ndarray:
+        """(B, d) candidate thetas -> (B,) log-likelihoods, one device call."""
+        return self._loglik_batch(self._prepare(thetas))
+
+    def loglik_sequential(self, thetas) -> np.ndarray:
+        """Reference path: one jitted evaluation per candidate with a host
+        sync after each, exactly like the pre-batch-engine optimizer loop in
+        `core/mle.py` (`float(fn(p))` per candidate).  Kept for benchmarks
+        and parity tests."""
+        thetas = self._prepare(thetas)
+        return np.array([float(self._loglik_single(t)) for t in thetas])
+
+    def krige_pmse(self, thetas) -> jnp.ndarray:
+        """(B, d) candidate thetas -> (B,) held-out kriging PMSE."""
+        if self._pmse_batch is None:
+            raise ValueError("engine was built without locs_new/y_true")
+        return self._pmse_batch(self._prepare(thetas))
+
+    def evaluate(self, thetas, *, with_pmse: Optional[bool] = None) -> BatchResult:
+        """One planned batch: log-likelihoods (+ PMSE when available).
+
+        When the plan allows it, this runs the fused program that reuses
+        the likelihood's Cholesky factor for the kriging solves (one
+        factorization per candidate instead of two)."""
+        thetas = self._prepare(thetas)
+        if with_pmse is None:
+            with_pmse = self._pmse_batch is not None
+        if with_pmse and self._eval_batch is not None:
+            ll, scores = self._eval_batch(thetas)
+            return BatchResult(thetas=np.asarray(thetas),
+                               logliks=np.asarray(ll),
+                               pmse=np.asarray(scores))
+        ll = np.asarray(self.loglik(thetas))
+        scores = np.asarray(self.krige_pmse(thetas)) if with_pmse else None
+        return BatchResult(thetas=np.asarray(thetas), logliks=ll, pmse=scores)
+
+
+def evaluate_batch(locs, z, thetas, plan: BatchPlan, *, locs_new=None,
+                   y_true=None) -> BatchResult:
+    """One-shot convenience wrapper around `BatchEngine.evaluate`."""
+    engine = BatchEngine(locs, z, plan, locs_new=locs_new, y_true=y_true)
+    return engine.evaluate(thetas)

@@ -19,39 +19,82 @@ import numpy as np
 from jax.scipy.linalg import solve_triangular
 
 from ..covariance.matern import matern_covariance
+from .likelihood import make_factor_fn
 from .precision import PrecisionPolicy
-from .tile_cholesky import reference_cholesky, tile_cholesky
 
 
-def krige(locs_obs, z_obs, locs_new, theta, policy: PrecisionPolicy, *,
-          nb: int = 128, nu_static=None, metric="euclidean", jitter=1e-6,
-          return_var: bool = False):
-    """Kriging mean (and optionally variance) at locs_new."""
-    theta = jnp.asarray(theta)
-    sigma_oo = matern_covariance(locs_obs, locs_obs, theta, nu_static=nu_static,
-                                 metric=metric).astype(policy.hi)
-    sigma_oo = sigma_oo + jitter * jnp.eye(sigma_oo.shape[0], dtype=policy.hi)
-    sigma_no = matern_covariance(locs_new, locs_obs, theta, nu_static=nu_static,
-                                 metric=metric).astype(policy.hi)
-    if policy.mode in ("mixed", "three_tier"):
-        l = tile_cholesky(sigma_oo, nb, policy)
-    else:
-        l = reference_cholesky(sigma_oo, policy.hi)
+def krige_from_factor(l, z_obs, sigma_no, *, sigma_nn_diag=None):
+    """Kriging mean (and variance) given a precomputed Cholesky factor.
+
+    l: (..., n, n) lower factor of Sigma_oo; sigma_no: (..., m, n) cross
+    covariance.  Sharing `l` lets callers that already factored Sigma_oo
+    for the log-likelihood (the batch engine) skip the second O(n^3)
+    factorization.  Returns mu, or (mu, var) when sigma_nn_diag is given.
+    """
     # mu = Sigma_no Sigma_oo^{-1} Z  via two triangular solves
-    w = solve_triangular(l, z_obs.astype(policy.hi), lower=True)
-    v = solve_triangular(l, sigma_no.T, lower=True)          # L^{-1} Sigma_on
-    mu = v.T @ w
-    if not return_var:
+    zb = jnp.broadcast_to(z_obs.astype(l.dtype),
+                          l.shape[:-2] + z_obs.shape[-1:])
+    w = solve_triangular(l, zb[..., None], lower=True)       # (..., n, 1)
+    v = solve_triangular(l, jnp.swapaxes(sigma_no.astype(l.dtype), -1, -2),
+                         lower=True)
+    mu = (jnp.swapaxes(v, -1, -2) @ w)[..., 0]               # (..., m)
+    if sigma_nn_diag is None:
         return mu
-    sigma_nn_diag = jnp.full((locs_new.shape[0],), theta[0], dtype=policy.hi)
-    var = sigma_nn_diag - jnp.sum(v * v, axis=0)
+    var = sigma_nn_diag - jnp.sum(v * v, axis=-2)
     return mu, var
 
 
+def krige(locs_obs, z_obs, locs_new, theta, policy: PrecisionPolicy, *,
+          nb: int = 128, nu_static=None, metric="euclidean", nugget=0.0,
+          jitter=1e-6, use_tiles=None, return_var: bool = False):
+    """Kriging mean (and optionally variance) at locs_new.
+
+    theta may be a single (3,) vector or a stacked (..., 3) batch of
+    candidates; the mean (and variance) then carry the same leading axes
+    (one mixed-precision factorization per candidate).  `nugget` is added
+    to Sigma_oo's diagonal only (never the cross covariance), matching the
+    likelihood's observation model.  `use_tiles` overrides the tiled/dense
+    factor choice exactly like `make_loglik`'s flag (None = auto).
+    """
+    theta = jnp.asarray(theta)
+    if policy.mode == "dst":
+        # DST has no kriging variant; predict densely in hi precision (the
+        # same convention the batch engine documents)
+        policy, use_tiles = PrecisionPolicy.full(policy.hi), None
+    # Sigma_oo is built and factored by THE shared covariance/factor-path
+    # selection (make_factor_fn), so kriging can never pick a different
+    # precision path than the likelihood for the same policy
+    factor = make_factor_fn(locs_obs, policy, nb=nb, nu_static=nu_static,
+                            metric=metric, nugget=nugget, jitter=jitter,
+                            use_tiles=use_tiles)
+    l = factor(theta)
+    sigma_no = matern_covariance(locs_new, locs_obs, theta, nu_static=nu_static,
+                                 metric=metric).astype(policy.hi)
+    if not return_var:
+        return krige_from_factor(l, z_obs, sigma_no)
+    sigma_nn_diag = theta[..., 0:1] * jnp.ones(locs_new.shape[0], dtype=policy.hi)
+    return krige_from_factor(l, z_obs, sigma_no, sigma_nn_diag=sigma_nn_diag)
+
+
 def pmse(mu, y_true):
+    """Mean squared prediction error; batched over leading axes of mu."""
     mu = jnp.asarray(mu)
     y_true = jnp.asarray(y_true).astype(mu.dtype)
-    return jnp.mean((mu - y_true) ** 2)
+    return jnp.mean((mu - y_true) ** 2, axis=-1)
+
+
+def krige_pmse(locs_obs, z_obs, locs_new, y_true, theta,
+               policy: PrecisionPolicy, *, nb: int = 128, nu_static=None,
+               metric="euclidean", nugget=0.0, jitter=1e-6, use_tiles=None):
+    """PMSE of the kriging predictor at locs_new against held-out y_true.
+
+    Batched over leading axes of theta; this is the per-candidate scoring
+    function the batch engine vmaps.
+    """
+    mu = krige(locs_obs, z_obs, locs_new, theta, policy, nb=nb,
+               nu_static=nu_static, metric=metric, nugget=nugget,
+               jitter=jitter, use_tiles=use_tiles)
+    return pmse(mu, y_true)
 
 
 def kfold_pmse(locs, z, theta, policy: PrecisionPolicy, *, k: int = 10,

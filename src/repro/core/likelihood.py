@@ -25,36 +25,52 @@ from .precision import PrecisionPolicy
 from .tile_cholesky import dst_cholesky, reference_cholesky, tile_cholesky
 
 
+def _forward_solve_vec(l, z):
+    """w = L^{-1} z with l (..., n, n) and z (n,); returns (..., n)."""
+    zb = jnp.broadcast_to(z, l.shape[:-2] + z.shape[-1:])
+    return solve_triangular(l, zb[..., None], lower=True)[..., 0]
+
+
 def loglik_from_factor(l, z):
-    """Eq. 2 given the lower Cholesky factor of Sigma."""
-    n = z.shape[0]
+    """Eq. 2 given the lower Cholesky factor of Sigma.
+
+    l may carry leading batch axes (one factor per candidate theta); the
+    result then has those batch axes.
+    """
+    n = z.shape[-1]
     z = z.astype(l.dtype)
-    logdet_half = jnp.sum(jnp.log(jnp.diagonal(l)))
-    w = solve_triangular(l, z, lower=True)
-    quad = jnp.sum(w * w)
+    diag = jnp.diagonal(l, axis1=-2, axis2=-1)
+    logdet_half = jnp.sum(jnp.log(diag), axis=-1)
+    w = _forward_solve_vec(l, z)
+    quad = jnp.sum(w * w, axis=-1)
     return -0.5 * n * jnp.log(2.0 * jnp.pi) - logdet_half - 0.5 * quad
 
 
 def profiled_loglik_from_factor(l, z):
     """Eq. 3: profile out theta1. `l` factors the CORRELATION matrix."""
-    n = z.shape[0]
+    n = z.shape[-1]
     z = z.astype(l.dtype)
-    logdet_half = jnp.sum(jnp.log(jnp.diagonal(l)))
-    w = solve_triangular(l, z, lower=True)
-    theta1_opt = jnp.sum(w * w) / n
+    diag = jnp.diagonal(l, axis1=-2, axis2=-1)
+    logdet_half = jnp.sum(jnp.log(diag), axis=-1)
+    w = _forward_solve_vec(l, z)
+    theta1_opt = jnp.sum(w * w, axis=-1) / n
     ll = (-0.5 * n * jnp.log(2.0 * jnp.pi) - 0.5 * n
           - 0.5 * n * jnp.log(theta1_opt) - logdet_half)
     return ll, theta1_opt
 
 
 def dst_loglik(blocks, z):
-    """Eq. 2 for the block-diagonal DST factor (independent blocks)."""
-    n = z.shape[0]
+    """Eq. 2 for the block-diagonal DST factor (independent blocks).
+
+    Block factors may carry leading batch axes, like loglik_from_factor.
+    """
+    n = z.shape[-1]
     total = -0.5 * n * jnp.log(2.0 * jnp.pi)
     for sl, l in blocks:
         zb = z[sl].astype(l.dtype)
-        w = solve_triangular(l, zb, lower=True)
-        total = total - jnp.sum(jnp.log(jnp.diagonal(l))) - 0.5 * jnp.sum(w * w)
+        diag = jnp.diagonal(l, axis1=-2, axis2=-1)
+        w = _forward_solve_vec(l, zb)
+        total = total - jnp.sum(jnp.log(diag), axis=-1) - 0.5 * jnp.sum(w * w, axis=-1)
     return total
 
 
@@ -63,10 +79,36 @@ def build_covariance(locs, theta, *, nu_static=None, metric="euclidean",
     cov = matern_covariance(locs, locs, theta, nu_static=nu_static,
                             metric=metric, nugget=nugget)
     if jitter:
-        cov = cov + jitter * jnp.eye(cov.shape[0], dtype=cov.dtype)
+        cov = cov + jitter * jnp.eye(cov.shape[-1], dtype=cov.dtype)
     if dtype is not None:
         cov = cov.astype(dtype)
     return cov
+
+
+def make_factor_fn(locs, policy: PrecisionPolicy, *, nb: int = 128,
+                   nu_static=None, metric="euclidean", nugget=0.0,
+                   jitter=1e-6, use_tiles=None):
+    """Return theta -> lower Cholesky factor of Sigma(theta).
+
+    This is THE covariance-build + factor-path selection (tiled Algorithm 1
+    vs dense reference, per `use_tiles`/policy mode), shared by `make_loglik`
+    and the batch engine's fused evaluate so the two can never diverge.
+    Not applicable to mode="dst" (block factors; see `dst_cholesky`).
+    """
+    if policy.mode == "dst":
+        raise ValueError("dst mode factors independent blocks; "
+                         "use dst_cholesky")
+    locs = jnp.asarray(locs)
+    tiled = use_tiles if use_tiles is not None else policy.mode != "full"
+
+    def factor(theta):
+        cov = build_covariance(locs, jnp.asarray(theta), nu_static=nu_static,
+                               metric=metric, nugget=nugget, jitter=jitter,
+                               dtype=policy.hi)
+        return tile_cholesky(cov, nb, policy) if tiled \
+            else reference_cholesky(cov, policy.hi)
+
+    return factor
 
 
 def make_loglik(locs, z, policy: PrecisionPolicy, *, nb: int = 128,
@@ -76,24 +118,31 @@ def make_loglik(locs, z, policy: PrecisionPolicy, *, nb: int = 128,
 
     use_tiles: force the tile path even for mode="full" (None = auto: tile
     path for mixed/three_tier, plain LAPACK-style for full).
+
+    The returned closure accepts a single theta (3,) or a stacked batch
+    (..., 3) of candidates, returning matching leading axes of
+    log-likelihoods (one factorization per candidate, batched tile ops).
     """
     locs = jnp.asarray(locs)
     z = jnp.asarray(z)
+    factor = None if policy.mode == "dst" else make_factor_fn(
+        locs, policy, nb=nb, nu_static=nu_static, metric=metric,
+        nugget=nugget, jitter=jitter, use_tiles=use_tiles)
 
     def loglik(theta):
         theta = jnp.asarray(theta)
-        cov_theta = jnp.array([jnp.asarray(1.0, theta.dtype), theta[0], theta[1]]) \
+        cov_theta = jnp.concatenate(
+            [jnp.ones_like(theta[..., :1]), theta[..., :2]], axis=-1) \
             if profiled else theta
-        cov = build_covariance(locs, cov_theta, nu_static=nu_static,
-                               metric=metric, nugget=nugget, jitter=jitter,
-                               dtype=policy.hi)
         if policy.mode == "dst":
-            blocks = dst_cholesky(cov, nb, policy.diag_thick, hi=policy.hi)
             if profiled:
                 raise NotImplementedError("profiled DST not needed")
+            cov = build_covariance(locs, cov_theta, nu_static=nu_static,
+                                   metric=metric, nugget=nugget,
+                                   jitter=jitter, dtype=policy.hi)
+            blocks = dst_cholesky(cov, nb, policy.diag_thick, hi=policy.hi)
             return dst_loglik(blocks, z)
-        tiled = use_tiles if use_tiles is not None else policy.mode != "full"
-        l = tile_cholesky(cov, nb, policy) if tiled else reference_cholesky(cov, policy.hi)
+        l = factor(cov_theta)
         if profiled:
             ll, _ = profiled_loglik_from_factor(l, z)
             return ll

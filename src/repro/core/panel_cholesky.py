@@ -228,7 +228,7 @@ def banded_loglik(band, off, z, t: int):
 
 
 def geostat_loglik_step(locs, z, theta, *, nb: int, policy: PrecisionPolicy,
-                        nu_static=None, metric="euclidean",
+                        nu_static=None, metric="euclidean", jitter=1e-6,
                         off_update: str = "square"):
     """One full likelihood evaluation: cov-gen -> factor -> solve -> ll.
 
@@ -236,7 +236,8 @@ def geostat_loglik_step(locs, z, theta, *, nb: int, policy: PrecisionPolicy,
     function the geostat dry-run lowers on the production mesh.
     """
     band, off = build_banded_covariance(locs, theta, nb=nb, policy=policy,
-                                        nu_static=nu_static, metric=metric)
+                                        nu_static=nu_static, metric=metric,
+                                        jitter=jitter)
     t = min(policy.diag_thick, band.shape[0])
     band, off = panel_cholesky_banded(band, off, policy, off_update=off_update)
     return banded_loglik(band, off, z, t)

@@ -40,36 +40,43 @@ def _trsm_right_lt(l_kk, a_ik, exec_dtype, out_dtype):
     """A_ik <- A_ik * L_kk^{-T} executed in exec_dtype, stored as out_dtype."""
     l = l_kk.astype(exec_dtype)
     a = a_ik.astype(exec_dtype)
-    x = solve_triangular(l, a.T, lower=True, trans=0)
-    return x.T.astype(out_dtype)
+    x = solve_triangular(l, jnp.swapaxes(a, -1, -2), lower=True, trans=0)
+    return jnp.swapaxes(x, -1, -2).astype(out_dtype)
 
 
 def split_tiles(a, nb: int):
-    """(n, n) -> dict[(i, j)] -> (nb, nb) lower-triangle tiles."""
-    n = a.shape[0]
+    """(..., n, n) -> dict[(i, j)] -> (..., nb, nb) lower-triangle tiles.
+
+    Leading axes of `a` are treated as a batch of matrices.
+    """
+    n = a.shape[-1]
     assert n % nb == 0, f"n={n} must be a multiple of nb={nb}"
     p = n // nb
     return {
-        (i, j): a[i * nb:(i + 1) * nb, j * nb:(j + 1) * nb]
+        (i, j): a[..., i * nb:(i + 1) * nb, j * nb:(j + 1) * nb]
         for i in range(p) for j in range(i + 1)
     }, p
 
 
 def assemble_lower(tiles, p: int, nb: int, dtype):
-    """Lower-triangle tiles -> full (n, n) lower-triangular matrix."""
+    """Lower-triangle tiles -> full (..., n, n) lower-triangular matrix."""
     n = p * nb
-    out = jnp.zeros((n, n), dtype=dtype)
+    batch = tiles[(0, 0)].shape[:-2]
+    out = jnp.zeros(batch + (n, n), dtype=dtype)
     for (i, j), t in tiles.items():
-        out = out.at[i * nb:(i + 1) * nb, j * nb:(j + 1) * nb].set(t.astype(dtype))
+        out = out.at[..., i * nb:(i + 1) * nb, j * nb:(j + 1) * nb].set(
+            t.astype(dtype))
     tri = jnp.tril(jnp.ones((n, n), dtype=bool))
     return jnp.where(tri, out, jnp.zeros((), dtype=dtype))
 
 
 def tile_cholesky(a, nb: int, policy: PrecisionPolicy):
-    """Factor SPD `a` (n, n) -> lower-triangular L in policy.hi dtype.
+    """Factor SPD `a` (..., n, n) -> lower-triangular L in policy.hi dtype.
 
     Faithful Algorithm 1.  For mode="full" every tile is hi (reference DP
-    path).  For mode="dst" use dst_cholesky instead.
+    path).  For mode="dst" use dst_cholesky instead.  Leading axes of `a`
+    are a batch of independent factorizations (one per candidate theta);
+    every tile op below batches over them.
     """
     if policy.mode == "dst":
         raise ValueError("use dst_cholesky for the DST baseline")
@@ -102,12 +109,13 @@ def tile_cholesky(a, nb: int, policy: PrecisionPolicy):
 
         for j in range(k + 1, p):                 # trailing update
             a_jk_hi = store[(j, k)].astype(hi)    # sconv2d'd copy if off-band
+            a_jk_hi_t = jnp.swapaxes(a_jk_hi, -1, -2)
             # line 19: dsyrk, always hi
-            store[(j, j)] = store[(j, j)] - a_jk_hi @ a_jk_hi.T
+            store[(j, j)] = store[(j, j)] - a_jk_hi @ a_jk_hi_t
             for i in range(j + 1, p):
                 if policy.in_band(i, j):          # line 25: dgemm
                     a_ik = store[(i, k)].astype(hi)
-                    store[(i, j)] = store[(i, j)] - a_ik @ a_jk_hi.T
+                    store[(i, j)] = store[(i, j)] - a_ik @ a_jk_hi_t
                 else:                             # line 27: sgemm (lo storage)
                     t = tier(i, j)
                     upd = lo_matmul(store[(i, k)], jnp.swapaxes(store[(j, k)], -1, -2),
@@ -124,16 +132,16 @@ def dst_cholesky(a, nb: int, diag_thick: int, hi=jnp.float32):
     diag_thick x diag_thick tiles (off-super-tile entries = zero), and each
     independent block is factored in full precision.  Returns the list of
     per-block factors plus the block slices (the block-diagonal factor).
+    Leading axes of `a` batch over independent matrices.
     """
-    n = a.shape[0]
+    n = a.shape[-1]
     assert n % nb == 0
-    p = n // nb
     super_nb = diag_thick * nb
     blocks = []
     start = 0
     while start < n:
         stop = min(start + super_nb, n)
-        blk = a[start:stop, start:stop].astype(hi)
+        blk = a[..., start:stop, start:stop].astype(hi)
         blocks.append((slice(start, stop), jnp.linalg.cholesky(blk)))
         start = stop
     return blocks

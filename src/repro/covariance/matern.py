@@ -167,7 +167,8 @@ def _kv_cf2(nu_frac, x):
 def kv(nu, x):
     """Modified Bessel function of the second kind K_nu(x), elementwise.
 
-    nu: scalar (may be traced), nu >= 0, nu < _NU_MAX_RECURRENCE - 0.5.
+    nu: scalar or array broadcastable against x (may be traced), nu >= 0,
+        nu < _NU_MAX_RECURRENCE - 0.5.
     x:  array, x > 0.  Gradients flow through both arguments' jnp ops.
     """
     nu = jnp.asarray(nu)
@@ -219,19 +220,30 @@ HALF_INTEGER_NUS = (0.5, 1.5, 2.5)
 def matern(r, theta, *, nu_static: float | None = None):
     """Matern covariance C(r; theta), paper Eq. (1).
 
-    r: distances (any shape), theta = (theta1, theta2, theta3).
+    r: distances (any shape), theta = (theta1, theta2, theta3) or a stacked
+      (..., 3) batch of parameter vectors: leading axes of theta broadcast
+      against r, producing one covariance per candidate theta (the batched
+      likelihood engine relies on this).
     nu_static: if one of HALF_INTEGER_NUS, use the closed form and IGNORE
-      theta[2] (the caller promises theta3 == nu_static); otherwise the
-      general Bessel path with traced smoothness theta[2] is used.
+      theta[..., 2] (the caller promises theta3 == nu_static); otherwise the
+      general Bessel path with traced smoothness theta[..., 2] is used.
     """
-    theta1, theta2 = theta[0], theta[1]
+    theta = jnp.asarray(theta)
     r = jnp.asarray(r)
+    # reshape each parameter to (batch..., 1, ..., 1) so it broadcasts
+    # against r regardless of r's rank
+    batch = theta.shape[:-1]
+
+    def param(i):
+        return theta[..., i].reshape(batch + (1,) * r.ndim)
+
+    theta1, theta2 = param(0), param(1)
     x = r / theta2
     if nu_static is not None:
         corr = _matern_half_integer(x, float(nu_static))
         return theta1 * jnp.where(r == 0.0, 1.0, corr)
 
-    nu = theta[2]
+    nu = param(2)
     xs = jnp.maximum(x, 1e-30)  # keep kv's domain valid at r == 0
     lognorm = (1.0 - nu) * jnp.log(2.0) - gammaln(nu)
     corr = jnp.exp(lognorm + nu * jnp.log(xs)) * kv(nu, xs)
@@ -266,10 +278,15 @@ def pairwise_distance(locs_a, locs_b, *, metric: str = "euclidean"):
 
 def matern_covariance(locs_a, locs_b, theta, *, nu_static: float | None = None,
                       metric: str = "euclidean", nugget: float = 0.0):
-    """Dense covariance block Sigma_ab with optional nugget on the diagonal."""
+    """Dense covariance block Sigma_ab with optional nugget on the diagonal.
+
+    theta may carry leading batch axes (see `matern`); the result is then a
+    (..., n_a, n_b) stack of covariance blocks.
+    """
     d = pairwise_distance(locs_a, locs_b, metric=metric)
     cov = matern(d, theta, nu_static=nu_static)
     if nugget:
-        n = min(cov.shape[0], cov.shape[1])
-        cov = cov.at[jnp.arange(n), jnp.arange(n)].add(nugget)
+        n = min(cov.shape[-2], cov.shape[-1])
+        idx = jnp.arange(n)
+        cov = cov.at[..., idx, idx].add(nugget)
     return cov

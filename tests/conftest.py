@@ -8,6 +8,16 @@ import pytest
 
 from repro.covariance import make_dataset
 
+# hypothesis is an optional extra (pip install '.[test]'); property-based
+# tests guard themselves on this flag so the deterministic tests in the
+# same modules always run
+try:
+    import hypothesis  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+HYPOTHESIS_SKIP_REASON = "property test needs hypothesis (pip install '.[test]')"
+
 
 @pytest.fixture(scope="session")
 def small_dataset():

@@ -1,0 +1,262 @@
+"""Batched evaluation engine: batched == sequential across precision modes,
+chunking, batched kriging PMSE, and the batched MLE drivers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BatchEngine,
+    BatchPlan,
+    PrecisionPolicy,
+    evaluate_batch,
+    fit_mle,
+    fit_mle_grid,
+    krige,
+    make_loglik,
+    pmse,
+    tile_cholesky,
+)
+from repro.covariance import make_dataset, matern_covariance
+
+NB = 32
+N = 128
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset(jax.random.PRNGKey(5), N, [1.0, 0.1, 0.5],
+                        nu_static=0.5)
+
+
+@pytest.fixture(scope="module")
+def thetas():
+    return jnp.array([[1.0, 0.10, 0.5],
+                      [0.7, 0.15, 0.5],
+                      [1.3, 0.05, 0.5],
+                      [0.9, 0.20, 0.5],
+                      [1.1, 0.12, 0.5]])
+
+
+# One tolerance per precision mode: modes sharing fp32 math agree to fp32
+# reassociation noise; bf16/fp8 off-band tiles tolerate coarser agreement.
+MODES = {
+    "full": (PrecisionPolicy.full(jnp.float32), 1e-6),
+    "mixed_bf16": (PrecisionPolicy.tpu(diag_thick=2), 1e-5),
+    "mixed_fp32": (PrecisionPolicy(mode="mixed", hi=jnp.float32,
+                                   lo=jnp.float32, diag_thick=2), 1e-6),
+    "dst": (PrecisionPolicy.dst(2), 1e-6),
+    "three_tier": (PrecisionPolicy.three_tier(1, 2), 1e-4),
+}
+
+
+@pytest.mark.parametrize("mode", list(MODES))
+def test_batched_loglik_equals_sequential(ds, thetas, mode):
+    pol, rtol = MODES[mode]
+    engine = BatchEngine(ds.locs, ds.z,
+                         BatchPlan(policy=pol, nb=NB, nu_static=0.5))
+    ll_bat = np.asarray(engine.loglik(thetas), dtype=np.float64)
+    ll_seq = np.asarray(engine.loglik_sequential(thetas), dtype=np.float64)
+    np.testing.assert_allclose(ll_bat, ll_seq, rtol=rtol)
+
+
+def test_batched_loglik_panel_path_equals_sequential(ds, thetas):
+    engine = BatchEngine(ds.locs, ds.z,
+                         BatchPlan(policy=PrecisionPolicy.tpu(2), nb=NB,
+                                   nu_static=0.5, path="panel"))
+    ll_bat = np.asarray(engine.loglik(thetas), dtype=np.float64)
+    ll_seq = np.asarray(engine.loglik_sequential(thetas), dtype=np.float64)
+    np.testing.assert_allclose(ll_bat, ll_seq, rtol=1e-5)
+
+
+def test_chunked_equals_unchunked_with_padding(ds, thetas):
+    # B=5 with chunk_size=2 forces padding (5 -> 6) and a 3-chunk lax.map
+    plan = BatchPlan(policy=PrecisionPolicy.full(jnp.float32), nb=NB,
+                     nu_static=0.5)
+    plan_c = BatchPlan(policy=PrecisionPolicy.full(jnp.float32), nb=NB,
+                       nu_static=0.5, chunk_size=2)
+    ll = BatchEngine(ds.locs, ds.z, plan).loglik(thetas)
+    ll_c = BatchEngine(ds.locs, ds.z, plan_c).loglik(thetas)
+    assert ll_c.shape == (thetas.shape[0],)
+    np.testing.assert_allclose(np.asarray(ll_c), np.asarray(ll), rtol=1e-6)
+
+
+def test_tile_cholesky_native_leading_batch(ds, thetas):
+    pol = PrecisionPolicy.tpu(2)
+    covs = matern_covariance(ds.locs, ds.locs, thetas, nu_static=0.5) \
+        + 1e-5 * jnp.eye(N)
+    l_bat = tile_cholesky(covs.astype(pol.hi), NB, pol)
+    assert l_bat.shape == (thetas.shape[0], N, N)
+    for b in range(thetas.shape[0]):
+        l_one = tile_cholesky(covs[b].astype(pol.hi), NB, pol)
+        np.testing.assert_allclose(np.asarray(l_bat[b]), np.asarray(l_one),
+                                   atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["full", "mixed_bf16", "dst"])
+def test_batched_kriging_pmse_matches_per_candidate(ds, thetas, mode):
+    pol, _ = MODES[mode]
+    obs, new = slice(0, 96), slice(96, None)
+    engine = BatchEngine(ds.locs[obs], ds.z[obs],
+                         BatchPlan(policy=pol, nb=NB, nu_static=0.5),
+                         locs_new=ds.locs[new], y_true=ds.z[new])
+    scores = np.asarray(engine.krige_pmse(thetas))
+    # per-candidate reference straight through core/kriging.py
+    pred_pol = pol if pol.mode != "dst" else PrecisionPolicy.full(pol.hi)
+    for b in range(thetas.shape[0]):
+        mu = krige(ds.locs[obs], ds.z[obs], ds.locs[new], thetas[b],
+                   pred_pol, nb=NB, nu_static=0.5)
+        ref = float(pmse(mu, ds.z[new]))
+        assert scores[b] == pytest.approx(ref, rel=1e-4)
+
+
+def test_evaluate_batch_result(ds, thetas):
+    obs, new = slice(0, 96), slice(96, None)
+    res = evaluate_batch(ds.locs[obs], ds.z[obs], thetas,
+                         BatchPlan(policy=PrecisionPolicy.full(jnp.float32),
+                                   nb=NB, nu_static=0.5),
+                         locs_new=ds.locs[new], y_true=ds.z[new])
+    assert res.logliks.shape == (thetas.shape[0],)
+    assert res.pmse is not None and res.pmse.shape == (thetas.shape[0],)
+    assert res.best_index == int(np.argmax(res.logliks))
+    np.testing.assert_array_equal(res.best_theta,
+                                  res.thetas[res.best_index])
+
+
+@pytest.mark.parametrize("nugget", [0.0, 0.05])
+def test_fused_evaluate_matches_separate_programs(ds, thetas, nugget):
+    # mixed policy -> plan qualifies for the fused (shared-factor) program;
+    # nugget != 0 checks both PMSE paths share the observation model
+    obs, new = slice(0, 96), slice(96, None)
+    engine = BatchEngine(ds.locs[obs], ds.z[obs],
+                         BatchPlan(policy=PrecisionPolicy.tpu(2), nb=NB,
+                                   nu_static=0.5, nugget=nugget),
+                         locs_new=ds.locs[new], y_true=ds.z[new])
+    assert engine._eval_batch is not None
+    res = engine.evaluate(thetas)
+    np.testing.assert_allclose(res.logliks, np.asarray(engine.loglik(thetas)),
+                               rtol=1e-5)
+    np.testing.assert_allclose(res.pmse, np.asarray(engine.krige_pmse(thetas)),
+                               rtol=1e-4)
+
+
+def test_grid_search_stays_inside_bounds():
+    # optimum of this surrogate (theta = (10, 1)) lies OUTSIDE the bounds;
+    # refinement must clamp so the returned theta respects the box
+    def f(ths):
+        x = jnp.log(ths)
+        return -(x[:, 0] - jnp.log(10.0)) ** 2 - (x[:, 1] - 0.0) ** 2
+
+    res = fit_mle_grid(f, [(0.2, 5.0), (0.02, 0.6)], num=5, refine=4)
+    assert 0.2 <= res.theta[0] <= 5.0
+    assert 0.02 <= res.theta[1] <= 0.6
+    # and it pushes to the boundary nearest the optimum
+    assert res.theta[0] == pytest.approx(5.0, rel=0.05)
+    assert res.theta[1] == pytest.approx(0.6, rel=0.05)
+
+
+def test_grid_search_all_nonfinite_raises():
+    bad = lambda ths: jnp.full(ths.shape[0], jnp.nan)
+    with pytest.raises(ValueError, match="non-finite"):
+        fit_mle_grid(bad, [(0.2, 5.0), (0.02, 0.6)], num=3, refine=2)
+
+
+def test_grid_search_finds_neighborhood_of_optimum(ds):
+    engine = BatchEngine(ds.locs, ds.z,
+                         BatchPlan(policy=PrecisionPolicy.full(jnp.float32),
+                                   nb=NB, nu_static=0.5))
+
+    # engine.loglik accepts (B, 2) directly when the plan pins nu
+    res = fit_mle_grid(engine.loglik, [(0.2, 5.0), (0.02, 0.6)],
+                       num=8, refine=3)
+    assert res.n_evals == 3 * 8 * 8
+    # grid optimum must (weakly) beat every first-level grid point it saw
+    ll_best = engine.loglik(jnp.asarray(res.theta, jnp.float32)[None, :2])
+    assert float(ll_best[0]) == pytest.approx(res.loglik, rel=1e-5)
+    # and land near the NM optimum of the same likelihood
+    ll = make_loglik(ds.locs, ds.z, PrecisionPolicy.full(jnp.float32),
+                     nb=NB, nu_static=0.5)
+    nm = fit_mle(lambda th: ll(jnp.concatenate([th, jnp.array([0.5])])),
+                 [0.8, 0.08], max_iters=60)
+    assert res.loglik == pytest.approx(nm.loglik, abs=0.5)
+
+
+def test_speculative_batched_nm_matches_sequential_nm(ds):
+    pol = PrecisionPolicy.full(jnp.float32)
+    engine = BatchEngine(ds.locs, ds.z,
+                         BatchPlan(policy=pol, nb=NB, nu_static=0.5))
+    ll = make_loglik(ds.locs, ds.z, pol, nb=NB, nu_static=0.5)
+
+    def f(th):
+        return ll(jnp.concatenate([th, jnp.array([0.5])]))
+
+    r_seq = fit_mle(f, [0.8, 0.08], max_iters=60)
+    r_bat = fit_mle(f, [0.8, 0.08], max_iters=60,
+                    batched_loglik_fn=engine.loglik)
+    assert r_bat.loglik == pytest.approx(r_seq.loglik, abs=1e-3)
+    np.testing.assert_allclose(r_bat.theta, r_seq.theta, rtol=0.05)
+
+
+def test_best_index_raises_when_all_nonfinite(thetas):
+    from repro.core import BatchResult
+    res = BatchResult(thetas=np.asarray(thetas),
+                      logliks=np.full(thetas.shape[0], np.nan))
+    with pytest.raises(ValueError, match="non-finite"):
+        _ = res.best_theta
+
+
+def test_fit_mle_batched_only_no_scalar_closure(ds):
+    engine = BatchEngine(ds.locs, ds.z,
+                         BatchPlan(policy=PrecisionPolicy.full(jnp.float32),
+                                   nb=NB, nu_static=0.5))
+    res = fit_mle(None, [0.8, 0.08], max_iters=60,
+                  batched_loglik_fn=engine.loglik)
+    assert np.isfinite(res.loglik)
+    with pytest.raises(ValueError, match="loglik_fn"):
+        fit_mle(None, [0.8, 0.08])
+
+
+def test_two_column_thetas_equal_pinned_nu_column(ds, thetas):
+    engine = BatchEngine(ds.locs, ds.z,
+                         BatchPlan(policy=PrecisionPolicy.full(jnp.float32),
+                                   nb=NB, nu_static=0.5))
+    np.testing.assert_array_equal(np.asarray(engine.loglik(thetas[:, :2])),
+                                  np.asarray(engine.loglik(thetas)))
+
+
+def test_use_tiles_consistent_between_pmse_paths(ds, thetas):
+    # use_tiles=False forces the dense reference factor; both public PMSE
+    # paths must honor it (krige_pmse used to pick the path from policy.mode
+    # alone and diverge from the fused program)
+    obs, new = slice(0, 96), slice(96, None)
+    engine = BatchEngine(ds.locs[obs], ds.z[obs],
+                         BatchPlan(policy=PrecisionPolicy.tpu(2), nb=NB,
+                                   nu_static=0.5, use_tiles=False),
+                         locs_new=ds.locs[new], y_true=ds.z[new])
+    res = engine.evaluate(thetas)
+    np.testing.assert_allclose(res.pmse, np.asarray(engine.krige_pmse(thetas)),
+                               rtol=1e-6)
+
+
+def test_profiled_plan_with_prediction_rejected(ds):
+    with pytest.raises(ValueError, match="profiled"):
+        BatchEngine(ds.locs[:96], ds.z[:96],
+                    BatchPlan(policy=PrecisionPolicy.full(jnp.float32),
+                              nb=NB, nu_static=0.5, profiled=True),
+                    locs_new=ds.locs[96:], y_true=ds.z[96:])
+
+
+def test_bad_plans_rejected():
+    with pytest.raises(ValueError):
+        BatchPlan(policy=PrecisionPolicy.full(jnp.float32), path="warp")
+    with pytest.raises(ValueError):
+        BatchPlan(policy=PrecisionPolicy.dst(2), path="panel")
+    with pytest.raises(ValueError):
+        BatchPlan(policy=PrecisionPolicy.full(jnp.float32), chunk_size=0)
+    # the panel likelihood has no nugget/profiled/use_tiles plumbing --
+    # silently evaluating a different model than requested is rejected
+    with pytest.raises(ValueError):
+        BatchPlan(policy=PrecisionPolicy.tpu(2), path="panel", nugget=0.05)
+    with pytest.raises(ValueError):
+        BatchPlan(policy=PrecisionPolicy.tpu(2), path="panel", profiled=True)
