@@ -1,0 +1,54 @@
+"""Accuracy columns next to perf numbers (verify/ conformance sweep).
+
+Emits one row per precision variant on the n=192 medium-correlation
+problem -- wall-clock per factorization in the `us_per_call` column and the
+oracle-measured accuracy metrics in `derived` -- plus per-suite summary
+rows for the kernel pairs.  This is the benchmark-facing face of
+`repro.verify`: the same generators and oracles the conformance tests
+gate on, so a perf PR that moves accuracy shows it here first.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tile_cholesky
+from repro.core.likelihood import loglik_from_factor
+from repro.verify import (
+    exact_factor,
+    exact_loglik,
+    loglik_drift,
+    matern_problem,
+    rel_frobenius,
+    sweep_kernels,
+)
+from repro.verify.bounds import dtype_pair, policy_bound
+from repro.verify.conformance import default_policies
+
+from .common import emit, time_call
+
+
+def run() -> None:
+    prob = matern_problem(192, "medium")
+    l_ref = exact_factor(prob.cov)
+    ll_ref = exact_loglik(prob.cov, prob.z)
+
+    for label, pol in default_policies().items():
+        cov = prob.cov.astype(pol.hi)
+        fn = jax.jit(lambda a, p=pol: tile_cholesky(a, prob.nb, p))
+        us = time_call(fn, cov)
+        l = np.asarray(fn(cov), np.float64)
+        ll = float(loglik_from_factor(jnp.asarray(l, jnp.float32), prob.z))
+        bound = policy_bound(pol, prob.regime)
+        emit(f"acc_chol_{label}_{prob.name}", us,
+             f"pair={dtype_pair(pol)};factor_rel={rel_frobenius(l, l_ref):.2e}"
+             f";loglik_drift={loglik_drift(ll, ll_ref):.2e}"
+             f";factor_bound={bound.factor_rel:.0e}")
+
+    # kernel pairs: worst measured error per kernel across the sweep grid
+    worst: dict[str, float] = {}
+    for rec in sweep_kernels():
+        err = rec.get("max_rel", rec.get("max_abs", 0.0))
+        worst[rec["kernel"]] = max(worst.get(rec["kernel"], 0.0), err)
+    for kernel, err in sorted(worst.items()):
+        emit(f"acc_kernel_{kernel}", 0.0, f"worst_err={err:.2e}")

@@ -10,6 +10,7 @@
   batch  batched likelihood engine throughput vs sequential path
   lm     40-cell (arch x shape) roofline table
   kernels Pallas kernel correctness/footprint summary
+  accuracy oracle-measured accuracy columns next to perf (repro.verify)
 
 Run a subset: python -m benchmarks.run fig4 fig7
 """
@@ -19,10 +20,11 @@ import traceback
 
 
 def main() -> None:
-    from . import (bench_batched_mle, bench_fig4_shared_memory,
-                   bench_fig5_data_movement, bench_fig6_scalability,
-                   bench_fig7_estimation, bench_fig8_pmse, bench_kernels,
-                   bench_lm_roofline, bench_table1_real)
+    from . import (bench_accuracy, bench_batched_mle,
+                   bench_fig4_shared_memory, bench_fig5_data_movement,
+                   bench_fig6_scalability, bench_fig7_estimation,
+                   bench_fig8_pmse, bench_kernels, bench_lm_roofline,
+                   bench_table1_real)
 
     suites = {
         "fig4": bench_fig4_shared_memory.run,
@@ -34,6 +36,7 @@ def main() -> None:
         "batch": bench_batched_mle.run,
         "lm": bench_lm_roofline.run,
         "kernels": bench_kernels.run,
+        "accuracy": bench_accuracy.run,
     }
     wanted = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

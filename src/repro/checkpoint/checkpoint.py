@@ -4,7 +4,7 @@ Layout: <dir>/step_<N>/
   manifest.json   -- tree structure, shapes, dtypes, step
   arrays.npz      -- flattened leaves keyed by tree path
 
-Design points for 1000+ nodes (DESIGN.md §5):
+Design points for 1000+ nodes (DESIGN.md §10):
   * save() snapshots device arrays to host then writes on a background
     thread -- the train loop never blocks on the filesystem;
   * restore(..., shardings=...) device_puts each leaf with the TARGET

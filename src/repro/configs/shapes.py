@@ -3,7 +3,7 @@
 LM transformer shapes are seq_len x global_batch.  decode_*/long_* lower
 `serve_step` (one new token against a KV cache of seq_len), NOT train_step.
 long_500k requires sub-quadratic attention: run for ssm/hybrid/SWA archs,
-skip for pure full-attention archs (recorded in DESIGN.md §4).
+skip for pure full-attention archs (recorded in DESIGN.md §9).
 """
 
 from __future__ import annotations
@@ -37,7 +37,7 @@ def cell_applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
     if shape.name == "long_500k" and not cfg.attention_is_subquadratic:
         return False, ("pure full-attention arch: 524288-token dense KV "
                        "decode is the quadratic regime this shape excludes "
-                       "(DESIGN.md §4)")
+                       "(DESIGN.md §9)")
     return True, ""
 
 
@@ -56,7 +56,7 @@ def input_specs(cfg: ArchConfig, shape: ShapeSpec):
         batch = {"tokens": s((b, sl), jnp.int32),
                  "labels": s((b, sl), jnp.int32)}
         if cfg.frontend == "vision_stub":
-            # seq_len counts patches + text (DESIGN.md §4)
+            # seq_len counts patches + text (DESIGN.md §9)
             n_text = sl - cfg.n_patches
             batch["tokens"] = s((b, n_text), jnp.int32)
             batch["labels"] = s((b, n_text), jnp.int32)

@@ -33,6 +33,22 @@ class PrecisionPolicy:
     solve_dtype: Any = jnp.float32  # dtype lo-precision TRSMs execute in
     accum_dtype: Any = jnp.float32  # accumulator for lo GEMMs (MXU semantics)
 
+    def __post_init__(self):
+        if self.mode not in ("full", "mixed", "dst", "three_tier"):
+            raise ValueError(f"unknown policy mode {self.mode!r}")
+        if self.diag_thick < 1:
+            raise ValueError(f"diag_thick must be >= 1, got {self.diag_thick}")
+        if self.mode == "three_tier":
+            if self.lo2 is None:
+                raise ValueError("three_tier policy needs a lo2 dtype")
+            if self.diag_thick2 <= self.diag_thick:
+                # diag_thick2 == diag_thick would silently erase the lo tier;
+                # ask for an explicit two-tier policy instead
+                raise ValueError(
+                    f"three_tier needs diag_thick2 > diag_thick, got "
+                    f"diag_thick2={self.diag_thick2} <= "
+                    f"diag_thick={self.diag_thick}")
+
     # ---- constructors -------------------------------------------------
     @staticmethod
     def full(hi=jnp.float32) -> "PrecisionPolicy":
@@ -66,7 +82,6 @@ class PrecisionPolicy:
     @staticmethod
     def three_tier(diag_thick: int, diag_thick2: int) -> "PrecisionPolicy":
         """fp32 band / bf16 mid / fp8(e4m3) far -- the paper's future work."""
-        assert diag_thick2 > diag_thick
         return PrecisionPolicy(mode="three_tier", hi=jnp.float32,
                                lo=jnp.bfloat16, lo2=jnp.float8_e4m3fn,
                                diag_thick=diag_thick, diag_thick2=diag_thick2,

@@ -1,7 +1,7 @@
 """Pallas TPU kernel: banded-precision flash decode attention.
 
 The paper's insight -- correlation decays with distance, so numerical
-precision can too -- transplanted to the LM serving path (DESIGN.md §4):
+precision can too -- transplanted to the LM serving path (DESIGN.md §9):
 during decode, the KV cache splits into
 
   * a NEAR segment (recent window) stored in bf16, and

@@ -9,7 +9,7 @@ On a real multi-host TPU pod each host runs this same entrypoint after
 jax.distributed.initialize(); the data pipeline shards by process_index,
 params/optimizer shard per models/sharding.py rules, and the
 fault-tolerant loop resumes from the latest checkpoint after any restart
-(the controller just relaunches the job -- see DESIGN.md §5).
+(the controller just relaunches the job -- see DESIGN.md §10).
 """
 
 from __future__ import annotations

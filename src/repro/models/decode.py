@@ -12,7 +12,7 @@ stacked over cycles (leading axis n_cycles) so decode lax.scans over
   whisper     : decoder self cache + cross {k, v: (C, B, F, KV, hd)}
 
 The banded-precision KV option (paper technique -> LM serving, DESIGN.md
-§4) stores the cache bf16 and, through the mp_attention kernel path,
+§9) stores the cache bf16 and, through the mp_attention kernel path,
 int8 beyond the near window; here the XLA decode path keeps bf16 storage
 (the kernel variant is exercised in tests/benchmarks).
 """

@@ -17,7 +17,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 # logical axis -> preferred physical axes, in priority order.
 # "fsdp" rules shard parameters over the data axis (ZeRO-3 style); XLA
 # all-gathers them per scan step, which is what keeps grok-1-314b's fp32
-# master + Adam state inside the 16 GB/chip HBM budget (DESIGN.md §5).
+# master + Adam state inside the 16 GB/chip HBM budget (DESIGN.md §10).
 DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "batch": ("pod", "data"),
     "seq": (),                    # activations: unsharded by default

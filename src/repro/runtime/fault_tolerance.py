@@ -9,7 +9,7 @@ counter-based pipeline (data/pipeline.py) makes resumption exact.
 The loop below implements the restart discipline end-to-end on CPU; the
 same structure drives the multi-pod launcher (launch/train.py).  XLA's
 static SPMD schedule removes scheduler-induced stragglers by construction
-(DESIGN.md §3); node-level stragglers surface as slow steps and trip the
+(DESIGN.md §8); node-level stragglers surface as slow steps and trip the
 `step_timeout` re-dispatch path.
 """
 

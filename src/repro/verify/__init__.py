@@ -1,0 +1,78 @@
+"""Accuracy-oracle verification subsystem.
+
+Turns the paper's central accuracy claim -- band-limited mixed precision
+accelerates the tile Cholesky "without any deterioration of the numerical
+accuracy" of likelihood evaluation and kriging -- into executable,
+regression-gated checks (DESIGN.md §7):
+
+  generators.py   SPD / Matern covariance problem generators with controlled
+                  condition number, correlation strength (the paper's
+                  weak/medium/strong θ settings) and curve ordering, shared
+                  by tests, the conformance sweep and benchmarks.
+  oracles.py      fp64 reference answers (factor, log-likelihood, kriging
+                  PMSE) plus forward/backward error metrics.
+  bounds.py       tolerance registry keyed by (policy mode, dtype pair,
+                  diag_thick, conditioning regime) -- the paper's
+                  Table-style accuracy envelopes, with a documented
+                  tightening procedure.
+  conformance.py  the sweep: every kernel pair (kernels/*/ops.py vs ref.py)
+                  and the three Cholesky variants (tile / panel / dst)
+                  through the generators, checked against the registry.
+  golden.py       committed golden accuracy artifacts + the --update-golden
+                  flow, so accuracy drift fails CI loudly.
+"""
+
+from .generators import (
+    CHOLESKY_NB,
+    CONDITIONS,
+    REGIMES,
+    SIZES,
+    CholeskyProblem,
+    attention_problem,
+    cholesky_problems,
+    matern_problem,
+    spd_matrix,
+)
+from .oracles import (
+    backward_error,
+    exact_factor,
+    exact_kriging_pmse,
+    exact_loglik,
+    loglik_drift,
+    pmse_drift,
+    rel_frobenius,
+)
+from .bounds import (
+    AccuracyBound,
+    dtype_pair,
+    lookup_bound,
+    policy_bound,
+    registry_table,
+)
+from .conformance import (
+    check_records,
+    default_policies,
+    run_conformance,
+    sweep_cholesky,
+    sweep_kernels,
+    sweep_kriging,
+)
+from .golden import (
+    GOLDEN_PATH,
+    compare_to_golden,
+    load_golden,
+    save_golden,
+)
+
+__all__ = [
+    "CHOLESKY_NB", "CONDITIONS", "REGIMES", "SIZES",
+    "CholeskyProblem", "attention_problem", "cholesky_problems",
+    "matern_problem", "spd_matrix",
+    "backward_error", "exact_factor", "exact_kriging_pmse", "exact_loglik",
+    "loglik_drift", "pmse_drift", "rel_frobenius",
+    "AccuracyBound", "dtype_pair", "lookup_bound", "policy_bound",
+    "registry_table",
+    "check_records", "default_policies", "run_conformance", "sweep_cholesky",
+    "sweep_kernels", "sweep_kriging",
+    "GOLDEN_PATH", "compare_to_golden", "load_golden", "save_golden",
+]

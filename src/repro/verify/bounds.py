@@ -1,0 +1,189 @@
+"""Tolerance registry: the paper's accuracy envelopes as executable bounds.
+
+Every conformance record is checked against an `AccuracyBound` looked up by
+the most specific matching key, in order:
+
+  (mode, pair, diag_thick, regime)
+  (mode, pair, regime)
+  (mode, pair)
+  (mode,)
+
+`pair` is the dtype-pair label from `dtype_pair(policy)` -- e.g.
+"f32/bf16" for the TPU production pair, "f64/f32" for the paper's literal
+CPU pair, "f32/bf16/f8e4m3" for the three-tier future-work policy.
+`regime` is the conditioning regime ("weak"/"medium"/"strong" correlation
+for covariance problems; "well"/"moderate"/"ill" for synthetic-SPD
+spectra).
+
+How the numbers were set, and how to tighten them
+-------------------------------------------------
+Each bound is the observed sweep metric (see golden/accuracy.json for the
+measured values) rounded UP to one significant digit and then multiplied
+by ~3x headroom, so the registry encodes the paper's qualitative envelope
+("mixed tracks full to low-precision rounding; DST deteriorates by orders
+of magnitude") while absorbing BLAS/compiler reassociation noise across
+machines.  To tighten:
+
+  1. run `python -m repro.verify.golden --update` on the reference machine
+     and inspect the refreshed measured metrics;
+  2. lower the registry entry toward `measured * 3`;
+  3. run the accuracy suite (`pytest -m accuracy`) on every supported
+     backend -- a bound is only as tight as the loosest backend allows;
+  4. commit the registry change together with the regenerated golden file,
+     so the gate's two layers (absolute envelope here, drift detection in
+     golden.py) move in lockstep.
+
+The golden gate is intentionally much tighter than this registry (factor
+~2 vs ~30): the registry answers "is the paper's claim still true", the
+golden file answers "did anything move at all".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..core.precision import PrecisionPolicy
+
+_DTYPE_NAMES = {
+    "float64": "f64",
+    "float32": "f32",
+    "bfloat16": "bf16",
+    "float8_e4m3fn": "f8e4m3",
+}
+
+
+def _dname(dt) -> str:
+    name = jnp.dtype(dt).name
+    return _DTYPE_NAMES.get(name, name)
+
+
+def dtype_pair(policy: PrecisionPolicy) -> str:
+    """Stable dtype-pair label for a policy ("f32/bf16", "f64/f32", ...)."""
+    if policy.mode == "full":
+        return _dname(policy.hi)
+    if policy.mode == "dst":
+        return f"{_dname(policy.hi)}/zero"
+    parts = [_dname(policy.hi), _dname(policy.lo)]
+    if policy.mode == "three_tier":
+        parts.append(_dname(policy.lo2))
+    return "/".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class AccuracyBound:
+    """Upper bounds on the sweep metrics; None = metric not bounded here."""
+    factor_rel: Optional[float] = None    # ||L - L64||_F / ||L64||_F
+    backward_rel: Optional[float] = None  # ||L L^T - A||_F / ||A||_F
+    loglik_drift: Optional[float] = None  # |ll - ll64| / max(1, |ll64|)
+    pmse_rel: Optional[float] = None      # |pmse - pmse64| / pmse64
+    max_rel: Optional[float] = None       # kernel pairs: max relative error
+    max_abs: Optional[float] = None       # kernel pairs: max absolute error
+
+    def violations(self, record: dict) -> list[str]:
+        """Metric names in `record` that exceed this bound.
+
+        A non-finite metric is always a violation (NaN compares False
+        against any limit, so it must be caught explicitly -- a NaN factor
+        is the loudest possible accuracy failure, not a pass).
+        """
+        out = []
+        for f in dataclasses.fields(self):
+            limit = getattr(self, f.name)
+            value = record.get(f.name)
+            if limit is None or value is None:
+                continue
+            if not math.isfinite(value):
+                out.append(f"{f.name}={value} is non-finite")
+            elif value > limit:
+                out.append(f"{f.name}={value:.3e} > bound {limit:.3e}")
+        return out
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+# Cholesky-variant envelopes.  The paper's claim under test: mixed-precision
+# factor error vs the DP(100%) reference stays at the low-precision rounding
+# scale (NO deterioration of loglik/kriging accuracy), while the DST
+# baseline at equal band width deteriorates by orders of magnitude.
+_REGISTRY: dict[tuple, AccuracyBound] = {
+    # -- full fp32 (DP(100%) run through the tile engine or dense LAPACK) --
+    # measured (SIZES x REGIMES): factor <= 5e-7, backward <= 6e-8,
+    # loglik <= 1e-7, pmse <= 5e-7
+    ("full", "f32"): AccuracyBound(
+        factor_rel=1e-5, backward_rel=1e-6, loglik_drift=1e-5, pmse_rel=1e-4),
+
+    # -- paper's literal CPU pair: fp64 band, fp32 off-band ---------------
+    # measured: factor <= 2.1e-7, backward <= 2.8e-8, loglik <= 6e-8 --
+    # the paper's "no deterioration" claim at fp64 reference scale
+    ("mixed", "f64/f32"): AccuracyBound(
+        factor_rel=1e-5, backward_rel=1e-6, loglik_drift=1e-6),
+
+    # -- degenerate mixed pair f32/f32 (tile engine == full, fp32 noise) --
+    ("mixed", "f32/f32"): AccuracyBound(
+        factor_rel=1e-5, backward_rel=1e-6, loglik_drift=1e-5, pmse_rel=1e-4),
+
+    # -- TPU production pair: fp32 band, bf16 off-band --------------------
+    # bf16 keeps ~3 decimal digits; off-band tiles carry ~1e-2 relative
+    # error which the band's hi-precision SYRK keeps from amplifying.
+    # measured: factor <= 1.4e-2 (t=1, strong), backward <= 1.8e-3,
+    # loglik <= 9.5e-4, pmse <= 1.9e-3
+    ("mixed", "f32/bf16"): AccuracyBound(
+        factor_rel=5e-2, backward_rel=1e-2, loglik_drift=5e-3, pmse_rel=1e-2),
+    # weak correlation barely exercises the off-band -> much tighter
+    # measured: factor <= 3.2e-4, backward <= 4.1e-4, loglik <= 1.1e-5
+    ("mixed", "f32/bf16", "weak"): AccuracyBound(
+        factor_rel=2e-3, backward_rel=2e-3, loglik_drift=1e-4, pmse_rel=1e-3),
+
+    # -- three-tier future work: fp32 / bf16 / fp8(e4m3) ------------------
+    # measured at (t=1, t2=3): factor <= 8.9e-2, backward <= 2.4e-2,
+    # loglik <= 1.5e-2.  fp8 at t2=2 NaNs on strong correlation (see
+    # conformance.default_policies) -- the bound also catches non-finites.
+    ("three_tier", "f32/bf16/f8e4m3"): AccuracyBound(
+        factor_rel=3e-1, backward_rel=1e-1, loglik_drift=1e-1, pmse_rel=5e-1),
+
+    # -- DST tapering baseline: off-band ZEROED ---------------------------
+    # Deterioration is the point: the factor differs from the dense one at
+    # O(1) (measured factor up to 0.64); the bound only asserts
+    # finiteness-scale sanity, and the claim test asserts DST >> mixed.
+    ("dst",): AccuracyBound(
+        factor_rel=2.0, backward_rel=1.0, loglik_drift=1.0, pmse_rel=10.0),
+
+    # -- kernel conformance pairs (ops.py vs ref.py) ----------------------
+    ("kernel", "matern_cov"): AccuracyBound(max_rel=5e-3, max_abs=1e-3),
+    ("kernel", "mp_syrk"): AccuracyBound(max_rel=1e-3, max_abs=1e-2),
+    # no max_abs: the ill-conditioned spectrum scales entries to ~1e6, so
+    # only scale-relative and backward error are meaningful
+    ("kernel", "blocked_potrf"): AccuracyBound(max_rel=1e-3,
+                                               backward_rel=1e-4),
+    ("kernel", "mp_attention"): AccuracyBound(max_abs=1e-3),
+}
+
+
+def registry_table() -> dict[tuple, AccuracyBound]:
+    """Read-only view of the registry (for docs/benchmark reporting)."""
+    return dict(_REGISTRY)
+
+
+def lookup_bound(mode: str, pair: str = None, diag_thick: int = None,
+                 regime: str = None) -> AccuracyBound:
+    """Most-specific registry entry for the given key components."""
+    for key in ((mode, pair, diag_thick, regime),
+                (mode, pair, regime),
+                (mode, pair),
+                (mode,)):
+        hit = _REGISTRY.get(key)
+        if hit is not None:
+            return hit
+    raise KeyError(f"no registered bound for mode={mode!r} pair={pair!r} "
+                   f"diag_thick={diag_thick!r} regime={regime!r}")
+
+
+def policy_bound(policy: PrecisionPolicy, regime: str = None) -> AccuracyBound:
+    """Registry lookup straight from a policy instance."""
+    return lookup_bound(policy.mode, dtype_pair(policy),
+                        policy.diag_thick, regime)

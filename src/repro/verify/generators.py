@@ -1,0 +1,122 @@
+"""Problem generators for the accuracy-oracle subsystem.
+
+One place produces every matrix the verification stack consumes, so tests,
+the conformance sweep and the accuracy benchmarks all measure error on the
+SAME distributions:
+
+  * `spd_matrix`        -- random SPD with an exact log-spaced spectrum
+                           (condition number is a parameter, not an accident);
+  * `matern_problem`    -- a synthetic geostatistical problem at one of the
+                           paper's correlation strengths (weak/medium/strong
+                           θ settings, Sec. VIII-D1), curve-ordered, with the
+                           fp32 covariance the mixed-precision paths factor;
+  * `cholesky_problems` -- the canonical sweep grid: ≥3 sizes × 3
+                           conditioning regimes.
+
+Correlation strength doubles as the conditioning regime for covariance
+problems: a longer range (strong θ2) pushes off-diagonal mass toward 1 and
+the smallest eigenvalue toward the jitter floor, exactly the regime where
+low-precision off-band tiles are most dangerous.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..covariance import CORRELATION_LEVELS, make_dataset
+from ..core.likelihood import build_covariance
+
+# Canonical sweep grid (kept small enough for tier-1 eager dispatch: the
+# tile engine unrolls p^3/6 tile ops, so p = n/nb stays <= 6).
+SIZES = (64, 128, 192)
+REGIMES = ("weak", "medium", "strong")
+CHOLESKY_NB = 32
+
+# Explicit condition numbers for the synthetic-SPD generators (kernel
+# conformance; covariance problems get their conditioning from REGIMES).
+CONDITIONS = {"well": 1e2, "moderate": 1e4, "ill": 1e6}
+
+
+def spd_matrix(seed, n: int, *, cond: float = 100.0, dtype=jnp.float32):
+    """Random SPD matrix with eigenvalues log-spaced on [1, cond].
+
+    seed may be an int or a PRNGKey.  The spectrum is exact (Q Λ Q^T with
+    orthonormal Q), so `cond` is the true 2-norm condition number -- the
+    knob the tolerance registry keys on.
+    """
+    key = seed if hasattr(seed, "dtype") else jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (n, n), jnp.float32)
+    q, _ = jnp.linalg.qr(a)
+    eigs = jnp.logspace(0.0, jnp.log10(cond), n, dtype=jnp.float32)
+    return ((q * eigs) @ q.T).astype(dtype)
+
+
+class CholeskyProblem(NamedTuple):
+    """One conditioned covariance-factorization problem.
+
+    `cov` is the fp32 matrix (jitter included) that every factorization
+    variant under test receives; oracles upcast THIS matrix to fp64, so
+    forward/backward error measures the factorization alone, not the
+    covariance build.
+    """
+    name: str           # e.g. "n128_medium"
+    n: int
+    nb: int
+    regime: str         # "weak" | "medium" | "strong"
+    theta: jnp.ndarray  # (3,) generating parameters
+    locs: jnp.ndarray   # (n, 2) Morton-ordered locations
+    z: jnp.ndarray      # (n,) field draw
+    cov: jnp.ndarray    # (n, n) fp32 covariance incl. jitter
+
+    @property
+    def p(self) -> int:
+        return self.n // self.nb
+
+
+# Per-regime jitter: identical for all variants of one problem so error
+# comparisons are apples-to-apples.
+_JITTER = 1e-6
+
+
+def matern_problem(n: int, regime: str, *, nb: int = CHOLESKY_NB,
+                   seed: int = 0, jitter: float = _JITTER) -> CholeskyProblem:
+    """One synthetic problem at a paper correlation level, Morton ordered."""
+    if regime not in CORRELATION_LEVELS:
+        raise ValueError(f"unknown regime {regime!r}; "
+                         f"expected one of {sorted(CORRELATION_LEVELS)}")
+    theta = CORRELATION_LEVELS[regime]
+    # one deterministic key per (n, regime, seed) so golden metrics are stable
+    key = jax.random.PRNGKey(
+        seed * 7919 + n * 31 + REGIMES.index(regime))
+    ds = make_dataset(key, n, theta, nu_static=0.5, ordering="morton")
+    cov = build_covariance(ds.locs, theta, nu_static=0.5, jitter=jitter,
+                           dtype=jnp.float32)
+    return CholeskyProblem(name=f"n{n}_{regime}", n=n, nb=nb, regime=regime,
+                           theta=theta, locs=ds.locs, z=ds.z, cov=cov)
+
+
+def cholesky_problems(sizes=SIZES, regimes=REGIMES, *, nb: int = CHOLESKY_NB,
+                      seed: int = 0) -> list[CholeskyProblem]:
+    """The canonical ≥3 sizes × 3 conditioning-regimes sweep grid."""
+    return [matern_problem(n, r, nb=nb, seed=seed)
+            for n in sizes for r in regimes]
+
+
+def attention_problem(seed: int, b: int, g: int, d: int, sn: int, sf: int,
+                      *, scale: float = 1.0, dtype=jnp.float32):
+    """Inputs for the banded-precision decode-attention kernel pair.
+
+    `scale` multiplies Q: larger logits sharpen the softmax, the attention
+    analogue of conditioning (quantization error concentrates on fewer
+    tokens).
+    """
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = scale * jax.random.normal(ks[0], (b, g, d), dtype)
+    k_near = jax.random.normal(ks[1], (b, sn, d), dtype)
+    v_near = jax.random.normal(ks[2], (b, sn, d), dtype)
+    k_far = jax.random.normal(ks[3], (b, sf, d), dtype)
+    v_far = jax.random.normal(ks[4], (b, sf, d), dtype)
+    return q, k_near, v_near, k_far, v_far

@@ -1,0 +1,136 @@
+"""Golden accuracy artifacts: drift fails CI loudly instead of silently.
+
+The committed file `golden/accuracy.json` records the conformance sweep's
+measured metrics on the reference machine.  The gate compares a fresh sweep
+against it with a slack factor (default 2x) plus per-metric absolute
+floors, so
+
+  * genuine accuracy regressions (a kernel edit that doubles factor error)
+    fail CI even while still inside the registry's ~30x envelope, and
+  * BLAS/compiler reassociation noise across machines does not flake.
+
+Update flow (after an INTENDED numerical change):
+
+    PYTHONPATH=src python -m repro.verify.golden --update
+    # or: pytest tests/test_conformance_sweep.py --update-golden
+
+then commit the regenerated JSON together with the change that moved the
+numbers -- the diff is the reviewable accuracy impact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "accuracy.json"
+
+# Comparison slack: fresh metric must stay below max(golden * SLACK, floor).
+SLACK = 2.0
+FLOORS = {
+    "factor_rel": 1e-6,
+    "backward_rel": 1e-6,
+    "loglik_drift": 1e-6,
+    "pmse_rel": 1e-4,
+    "max_rel": 1e-6,
+    "max_abs": 1e-5,
+}
+_METRICS = tuple(FLOORS)
+
+
+def _metric_view(record: dict) -> dict:
+    return {k: float(record[k]) for k in _METRICS if k in record}
+
+
+def save_golden(records, path: Path = None) -> Path:
+    """Write the sweep's metrics as the new golden artifact."""
+    path = GOLDEN_PATH if path is None else Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    payload = {
+        "format": 1,
+        "slack": SLACK,
+        "records": {r["id"]: _metric_view(r) for r in records},
+    }
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    return path
+
+
+def load_golden(path: Path = None) -> dict:
+    path = GOLDEN_PATH if path is None else Path(path)
+    return json.loads(path.read_text())
+
+
+def compare_to_golden(records, golden: dict = None, *,
+                      slack: float = SLACK) -> list[tuple[str, str]]:
+    """(record id, message) for every drift vs the golden artifact.
+
+    Flags three failure classes: a metric exceeding its golden value by
+    more than `slack` (accuracy regression), a sweep record missing from
+    the golden file (gate doesn't cover it -- regenerate), and a golden
+    record missing from the sweep (coverage silently lost).
+    """
+    golden = load_golden() if golden is None else golden
+    gold_records = golden["records"]
+    drifts = []
+    seen = set()
+    for rec in records:
+        rid = rec["id"]
+        seen.add(rid)
+        gold = gold_records.get(rid)
+        if gold is None:
+            drifts.append((rid, "not in golden file -- run --update-golden"))
+            continue
+        for name, value in _metric_view(rec).items():
+            if name not in gold:
+                drifts.append((rid, f"metric {name} not in golden file"))
+                continue
+            limit = max(gold[name] * slack, FLOORS[name])
+            if value > limit:
+                drifts.append((rid, f"{name}={value:.3e} drifted past "
+                                    f"golden {gold[name]:.3e} (limit "
+                                    f"{limit:.3e})"))
+    for rid in gold_records:
+        if rid not in seen:
+            drifts.append((rid, "golden record missing from sweep -- "
+                                "coverage lost"))
+    return drifts
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        description="Golden accuracy gate for the conformance sweep.")
+    parser.add_argument("--update", action="store_true",
+                        help="run the sweep and rewrite the golden file")
+    parser.add_argument("--check", action="store_true",
+                        help="run the sweep and fail on drift (default)")
+    parser.add_argument("--path", default=None,
+                        help="override the golden file location")
+    args = parser.parse_args(argv)
+
+    from .bounds import lookup_bound  # noqa: F401  (import check)
+    from .conformance import check_records, run_conformance
+
+    records = run_conformance()
+    violations = check_records(records)
+    for rid, msg in violations:
+        print(f"BOUND  {rid}: {msg}", file=sys.stderr)
+
+    if args.update:
+        path = save_golden(records, args.path)
+        print(f"wrote {len(records)} golden records to {path}")
+        return 1 if violations else 0
+
+    golden = load_golden(args.path)
+    drifts = compare_to_golden(records, golden)
+    for rid, msg in drifts:
+        print(f"DRIFT  {rid}: {msg}", file=sys.stderr)
+    ok = not violations and not drifts
+    print(f"{len(records)} records, {len(violations)} bound violations, "
+          f"{len(drifts)} golden drifts")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

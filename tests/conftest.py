@@ -34,8 +34,17 @@ def small_cov(small_dataset):
 
 
 def spd_matrix(key, n, dtype=jnp.float32, cond=100.0):
-    """Random SPD matrix with controlled condition number."""
-    a = jax.random.normal(key, (n, n), dtype=jnp.float32)
-    q, _ = jnp.linalg.qr(a)
-    eigs = jnp.logspace(0, jnp.log10(cond), n)
-    return (q * eigs) @ q.T.astype(dtype)
+    """Random SPD matrix with controlled condition number.
+
+    Thin wrapper over the canonical generator in repro.verify so tests and
+    the conformance sweep draw from the same problem distribution.
+    """
+    from repro.verify.generators import spd_matrix as _spd
+    return _spd(key, n, cond=cond, dtype=dtype)
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="rewrite src/repro/verify/golden/accuracy.json from this "
+             "machine's conformance sweep instead of gating against it")

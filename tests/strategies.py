@@ -1,0 +1,65 @@
+"""Shared hypothesis strategies for the property-based tests.
+
+This module imports hypothesis unconditionally -- test modules must guard
+with `conftest.HAVE_HYPOTHESIS` before importing it, so the deterministic
+tests in the same files keep running without the optional extra.
+
+Problem matrices come from `repro.verify.generators`, the same distribution
+the conformance sweep and benchmarks draw from: a property that fails here
+points at a problem the accuracy gates would also see.
+"""
+
+import jax.numpy as jnp
+from hypothesis import strategies as st
+
+from repro.core import PrecisionPolicy
+from repro.verify.generators import spd_matrix
+
+seeds = st.integers(0, 2**31 - 1)
+
+# Bessel / Matern parameter ranges exercised by the covariance properties
+matern_nus = st.floats(0.05, 4.5)
+bessel_args = st.floats(1e-3, 50.0)
+
+
+@st.composite
+def tile_geometries(draw, sizes=(64, 128), tiles=(16, 32)):
+    """(n, nb) with nb | n, so the tile grid is exact."""
+    n = draw(st.sampled_from(sizes))
+    nb = draw(st.sampled_from(tiles))
+    return n, nb
+
+
+@st.composite
+def spd_problems(draw, sizes=(64, 128), tiles=(16, 32),
+                 conds=(10.0, 100.0, 1e4)):
+    """(spd matrix, nb): controlled-condition SPD problem + tile size."""
+    n, nb = draw(tile_geometries(sizes, tiles))
+    a = spd_matrix(draw(seeds), n, cond=draw(st.sampled_from(conds)))
+    return a, nb
+
+
+@st.composite
+def precision_policies(draw, max_thick=4):
+    """Any valid policy: full, the mixed pairs, dst, or three-tier."""
+    mode = draw(st.sampled_from(["full", "mixed_tpu", "mixed_paper", "dst",
+                                 "three_tier"]))
+    t = draw(st.integers(1, max_thick))
+    if mode == "full":
+        return PrecisionPolicy.full(jnp.float32)
+    if mode == "mixed_tpu":
+        return PrecisionPolicy.tpu(diag_thick=t)
+    if mode == "mixed_paper":
+        return PrecisionPolicy.paper_cpu(diag_thick=t)
+    if mode == "dst":
+        return PrecisionPolicy.dst(t)
+    return PrecisionPolicy.three_tier(t, t + draw(st.integers(1, 2)))
+
+
+@st.composite
+def mixed_policies(draw, max_thick=4):
+    """Policies whose factor approximates the dense one (no dst zeroing)."""
+    pol = draw(precision_policies(max_thick))
+    if pol.mode == "dst" or pol.hi == jnp.float64:
+        return PrecisionPolicy.tpu(diag_thick=pol.diag_thick)
+    return pol

@@ -206,6 +206,51 @@ def test_best_index_raises_when_all_nonfinite(thetas):
         _ = res.best_theta
 
 
+def test_best_index_skips_nonfinite_deterministically(thetas):
+    # NaN candidates (non-SPD covariances) never win, -inf never wins, and
+    # ties resolve to the FIRST maximal finite index -- stable across runs
+    from repro.core import BatchResult
+    res = BatchResult(thetas=np.asarray(thetas),
+                      logliks=np.array([np.nan, -3.0, 2.5, -np.inf, 2.5]))
+    assert res.best_index == 2
+    assert res.best_loglik == 2.5
+    np.testing.assert_array_equal(res.best_theta, np.asarray(thetas)[2])
+    # a NaN in front must not shift the argmax (np.argmax on raw NaN would)
+    res2 = BatchResult(thetas=np.asarray(thetas),
+                       logliks=np.array([np.nan, 7.0, 2.5, 1.0, 2.5]))
+    assert res2.best_index == 1
+
+
+@pytest.mark.parametrize("b", [1, 3, 5, 7])
+@pytest.mark.parametrize("chunk_size", [2, 4])
+def test_chunked_helper_bitwise_identical(b, chunk_size):
+    # padding (repeat-last) + lax.map + unpad must be a pure batching detail:
+    # bit-identical to the unchunked fn on every non-divisible batch size
+    from repro.core.batch_engine import chunked
+
+    def fn(x):  # batched, non-elementwise: mixes the trailing axes
+        return jnp.einsum("bij,bkj->bik", x, x) + jnp.sin(x)
+
+    x = jax.random.normal(jax.random.PRNGKey(b), (b, 8, 8), jnp.float32)
+    out = np.asarray(fn(x))
+    out_c = np.asarray(chunked(fn, chunk_size)(x))
+    assert out_c.shape == out.shape
+    np.testing.assert_array_equal(out_c, out)
+
+
+def test_chunked_engine_loglik_bitwise_across_batch_sizes(ds, thetas):
+    # engine-level: the chunked program evaluates the same candidates to the
+    # same bits for every B that does not divide the chunk
+    plan = BatchPlan(policy=PrecisionPolicy.full(jnp.float32), nb=NB,
+                     nu_static=0.5)
+    plan_c = BatchPlan(policy=PrecisionPolicy.full(jnp.float32), nb=NB,
+                       nu_static=0.5, chunk_size=2)
+    for b in (1, 3, 5):
+        ll = np.asarray(BatchEngine(ds.locs, ds.z, plan).loglik(thetas[:b]))
+        ll_c = np.asarray(BatchEngine(ds.locs, ds.z, plan_c).loglik(thetas[:b]))
+        np.testing.assert_array_equal(ll_c, ll)
+
+
 def test_fit_mle_batched_only_no_scalar_closure(ds):
     engine = BatchEngine(ds.locs, ds.z,
                          BatchPlan(policy=PrecisionPolicy.full(jnp.float32),

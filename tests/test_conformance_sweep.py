@@ -1,0 +1,110 @@
+"""The conformance sweep as a test suite: bounds, claims, coverage, golden.
+
+One sweep run (module-scoped fixture, ~1 min on CPU) feeds four gates:
+
+  1. every record inside its registered tolerance bound (bounds.py);
+  2. the paper's headline claim, asserted directly: mixed precision does
+     NOT deteriorate accuracy, while the DST tapering baseline does;
+  3. coverage: all four kernel pairs and all three Cholesky variants on
+     the full SIZES x REGIMES grid -- a silently skipped variant fails;
+  4. the golden regression gate (pass --update-golden to re-baseline).
+"""
+
+import numpy as np
+import pytest
+
+from repro.verify import (
+    GOLDEN_PATH,
+    REGIMES,
+    SIZES,
+    check_records,
+    compare_to_golden,
+    lookup_bound,
+    run_conformance,
+    save_golden,
+)
+from repro.verify.golden import load_golden
+
+pytestmark = pytest.mark.accuracy
+
+
+@pytest.fixture(scope="module")
+def records():
+    return run_conformance()
+
+
+def _by_id(records):
+    return {r["id"]: r for r in records}
+
+
+def test_all_records_within_registered_bounds(records):
+    violations = check_records(records)
+    assert violations == [], "\n".join(f"{rid}: {msg}"
+                                       for rid, msg in violations)
+
+
+def test_no_deterioration_claim(records):
+    """The paper's central claim, on the production pair: the mixed factor
+    tracks the fp64 oracle at low-precision rounding scale, and the DST
+    baseline at the same band width is a magnitude worse."""
+    recs = _by_id(records)
+    for n in SIZES:
+        for regime in REGIMES:
+            mixed = recs[f"chol/tile/mixed_f32bf16_t2/n{n}_{regime}"]
+            dst = recs[f"chol/dst/t2/n{n}_{regime}"]
+            bound = lookup_bound("mixed", "f32/bf16", 2, regime)
+            assert mixed["factor_rel"] <= bound.factor_rel
+            assert mixed["loglik_drift"] <= bound.loglik_drift
+            if n >= 128:  # at n=64, p=2 the DST super-tile covers most of A
+                assert dst["factor_rel"] > 10 * mixed["factor_rel"], (
+                    f"n{n}_{regime}: DST should deteriorate, mixed should "
+                    f"not -- dst={dst['factor_rel']:.2e} "
+                    f"mixed={mixed['factor_rel']:.2e}")
+
+
+def test_paper_pair_matches_f64_reference(records):
+    """fp64 band / fp32 off-band: 'no deterioration' at the paper's own
+    dtype pair -- factor error stays at fp32 rounding scale."""
+    for rec in records:
+        if rec["id"].startswith("chol/tile/paper_f64f32_t2/"):
+            assert rec["factor_rel"] < 1e-5
+            assert rec["loglik_drift"] < 1e-6
+
+
+def test_sweep_coverage(records):
+    recs = _by_id(records)
+    # three Cholesky variants on the full grid
+    for n in SIZES:
+        for regime in REGIMES:
+            for variant in (f"chol/tile/full_f32/n{n}_{regime}",
+                            f"chol/tile/mixed_f32bf16_t2/n{n}_{regime}",
+                            f"chol/panel/mixed_f32bf16_t2/n{n}_{regime}",
+                            f"chol/dst/t2/n{n}_{regime}",
+                            f"krige/mixed_f32bf16_t2/n{n}_{regime}"):
+                assert variant in recs, f"sweep lost coverage of {variant}"
+    # all four kernel pairs, >= 9 cases each (3 shapes x 3 regimes)
+    kernels = {}
+    for rec in records:
+        if rec["kind"] == "kernel":
+            kernels[rec["kernel"]] = kernels.get(rec["kernel"], 0) + 1
+    assert set(kernels) == {"matern_cov", "mp_syrk", "blocked_potrf",
+                            "mp_attention"}
+    assert all(count >= 9 for count in kernels.values()), kernels
+
+
+def test_mixed_beats_dst_on_likelihood(records):
+    """Accuracy ordering the paper's Fig. 7/8 relies on, in aggregate."""
+    drift = lambda pat: np.median([r["loglik_drift"] for r in records
+                                   if r["id"].startswith(pat)])
+    assert drift("chol/tile/mixed_f32bf16_t2/") < drift("chol/dst/")
+
+
+def test_golden_regression_gate(records, request):
+    if request.config.getoption("--update-golden"):
+        path = save_golden(records)
+        pytest.skip(f"rewrote golden baseline at {path}")
+    assert GOLDEN_PATH.exists(), (
+        "no golden baseline committed -- run "
+        "pytest tests/test_conformance_sweep.py --update-golden")
+    drifts = compare_to_golden(records, load_golden())
+    assert drifts == [], "\n".join(f"{rid}: {msg}" for rid, msg in drifts)

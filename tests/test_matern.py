@@ -9,7 +9,8 @@ import scipy.special as sp
 from conftest import HAVE_HYPOTHESIS, HYPOTHESIS_SKIP_REASON
 
 if HAVE_HYPOTHESIS:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, settings
+    import strategies as sts
 
 from repro.covariance import kv, matern, matern_covariance, pairwise_distance
 
@@ -60,7 +61,7 @@ def test_matern_gradients_finite():
 
 
 if HAVE_HYPOTHESIS:
-    @given(st.floats(0.05, 4.5), st.floats(1e-3, 50.0))
+    @given(sts.matern_nus, sts.bessel_args)
     @settings(max_examples=30, deadline=None)
     def test_kv_positive_and_decreasing_in_x(nu, x):
         v1 = float(kv(nu, jnp.float32(x)))

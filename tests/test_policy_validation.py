@@ -1,0 +1,130 @@
+"""PrecisionPolicy validation + band-degeneracy edge cases.
+
+The degenerate corners of the policy space used to be unspecified: a band
+wider than the tile grid, a three-tier policy whose second threshold erases
+the middle tier, a 1-tile matrix.  These tests pin the intended semantics:
+wide bands degenerate to the full path BITWISE, nonsense policies raise at
+construction, and every factorization variant handles p = 1.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PrecisionPolicy,
+    dst_assemble,
+    dst_cholesky,
+    reference_cholesky,
+    tile_cholesky,
+)
+from repro.core.panel_cholesky import (
+    assemble_from_banded,
+    build_banded_covariance,
+    panel_cholesky_banded,
+)
+from repro.verify.generators import matern_problem
+
+
+# ---- construction-time validation -----------------------------------------
+
+def test_unknown_mode_rejected():
+    with pytest.raises(ValueError, match="mode"):
+        PrecisionPolicy(mode="half", hi=jnp.float32, lo=jnp.bfloat16,
+                        diag_thick=1)
+
+
+@pytest.mark.parametrize("t", [0, -1])
+def test_nonpositive_diag_thick_rejected(t):
+    with pytest.raises(ValueError, match="diag_thick"):
+        PrecisionPolicy(mode="mixed", hi=jnp.float32, lo=jnp.bfloat16,
+                        diag_thick=t)
+
+
+def test_three_tier_requires_lo2():
+    with pytest.raises(ValueError, match="lo2"):
+        PrecisionPolicy(mode="three_tier", hi=jnp.float32, lo=jnp.bfloat16,
+                        diag_thick=1, diag_thick2=3)
+
+
+@pytest.mark.parametrize("t, t2", [(2, 2), (3, 1)])
+def test_three_tier_thresholds_must_be_ordered(t, t2):
+    # diag_thick2 == diag_thick silently erases the lo tier -- reject it
+    with pytest.raises(ValueError, match="diag_thick2"):
+        PrecisionPolicy.three_tier(diag_thick=t, diag_thick2=t2)
+
+
+def test_valid_constructors_still_work():
+    assert PrecisionPolicy.three_tier(1, 3).mode == "three_tier"
+    assert PrecisionPolicy.full().mode == "full"
+    assert PrecisionPolicy.dst(2).mode == "dst"
+
+
+# ---- band >= p degenerates to the full path, bitwise ----------------------
+
+@pytest.fixture(scope="module")
+def prob():
+    return matern_problem(128, "medium")  # p = 4 tiles
+
+
+def test_wide_band_mixed_equals_full_bitwise(prob):
+    # every tile in band -> every op takes the identical hi-precision branch
+    l_full = tile_cholesky(prob.cov, prob.nb, PrecisionPolicy.full(jnp.float32))
+    l_wide = tile_cholesky(prob.cov, prob.nb,
+                           PrecisionPolicy.tpu(diag_thick=prob.p))
+    np.testing.assert_array_equal(np.asarray(l_wide), np.asarray(l_full))
+
+
+def test_wide_band_three_tier_equals_full_bitwise(prob):
+    pol = PrecisionPolicy.three_tier(diag_thick=prob.p,
+                                     diag_thick2=prob.p + 1)
+    l_3t = tile_cholesky(prob.cov, prob.nb, pol)
+    l_full = tile_cholesky(prob.cov, prob.nb, PrecisionPolicy.full(jnp.float32))
+    np.testing.assert_array_equal(np.asarray(l_3t), np.asarray(l_full))
+
+
+def test_dst_wide_band_is_dense_cholesky(prob):
+    # one super-tile covers the matrix -> DST degenerates to dense Cholesky
+    blocks = dst_cholesky(prob.cov, prob.nb, diag_thick=prob.p)
+    assert len(blocks) == 1
+    l = dst_assemble(blocks, prob.n)
+    np.testing.assert_array_equal(
+        np.asarray(l), np.asarray(reference_cholesky(prob.cov, jnp.float32)))
+
+
+# ---- 1-tile matrices (p = 1) ----------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny():
+    return matern_problem(32, "medium", nb=32)  # n == nb -> p = 1
+
+
+@pytest.mark.parametrize("pol", [
+    PrecisionPolicy.full(jnp.float32),
+    PrecisionPolicy.tpu(diag_thick=1),
+    PrecisionPolicy.three_tier(1, 2),
+], ids=["full", "mixed", "three_tier"])
+def test_single_tile_tile_engine_is_dense(tiny, pol):
+    l = tile_cholesky(tiny.cov, tiny.nb, pol)
+    np.testing.assert_array_equal(
+        np.asarray(l), np.asarray(reference_cholesky(tiny.cov, jnp.float32)))
+
+
+def test_single_tile_panel_path(tiny):
+    pol = PrecisionPolicy.tpu(diag_thick=2)      # t clamps to p = 1
+    band, off = build_banded_covariance(tiny.locs, tiny.theta, nb=tiny.nb,
+                                        policy=pol, nu_static=0.5,
+                                        jitter=1e-6)
+    band, off = panel_cholesky_banded(band, off, pol)
+    l = assemble_from_banded(band, off, 1)
+    ref = reference_cholesky(tiny.cov, jnp.float32)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_single_tile_dst(tiny):
+    blocks = dst_cholesky(tiny.cov, tiny.nb, diag_thick=1)
+    assert len(blocks) == 1
+    np.testing.assert_array_equal(
+        np.asarray(dst_assemble(blocks, tiny.n)),
+        np.asarray(reference_cholesky(tiny.cov, jnp.float32)))

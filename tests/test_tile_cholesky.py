@@ -8,7 +8,8 @@ import pytest
 from conftest import HAVE_HYPOTHESIS, HYPOTHESIS_SKIP_REASON
 
 if HAVE_HYPOTHESIS:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, settings
+    import strategies as sts
 
 from repro.core import (
     PrecisionPolicy,
@@ -98,21 +99,20 @@ def test_dp_fraction_labels():
 
 
 if HAVE_HYPOTHESIS:
-    @given(st.integers(0, 2**31 - 1), st.sampled_from([64, 128]),
-           st.sampled_from([16, 32]))
+    @given(sts.spd_problems(conds=(10.0, 50.0, 100.0)),
+           sts.mixed_policies(max_thick=2))
     @settings(max_examples=8, deadline=None)
-    def test_property_mixed_cholesky_reconstructs_spd(seed, n, nb):
-        """Property: for random SPD matrices, L_mp L_mp^T ~ A within
-        lo-precision tolerance and the factor is lower-triangular with
-        positive diagonal."""
-        key = jax.random.PRNGKey(seed)
-        a = spd_matrix(key, n, cond=50.0)
-        l = tile_cholesky(a, nb, PrecisionPolicy.tpu(diag_thick=1))
+    def test_property_mixed_cholesky_reconstructs_spd(problem, pol):
+        """Property: for random SPD matrices under any non-dst policy,
+        L_mp L_mp^T ~ A within lo-precision tolerance and the factor is
+        lower-triangular with positive diagonal."""
+        a, nb = problem
+        l = tile_cholesky(a, nb, pol)
         l_np = np.asarray(l, np.float64)
         assert np.allclose(l_np, np.tril(l_np))
         assert np.all(np.diag(l_np) > 0)
         scale = np.abs(np.asarray(a)).max()
-        assert np.abs(l_np @ l_np.T - np.asarray(a, np.float64)).max() < 0.05 * scale
+        assert np.abs(l_np @ l_np.T - np.asarray(a, np.float64)).max() < 0.1 * scale
 else:
     @pytest.mark.skip(reason=HYPOTHESIS_SKIP_REASON)
     def test_property_mixed_cholesky_reconstructs_spd():

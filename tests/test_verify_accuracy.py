@@ -1,0 +1,210 @@
+"""Fast unit tests for the verify/ subsystem itself.
+
+The conformance sweep (test_conformance_sweep.py) trusts generators,
+oracles, the bound registry, and the golden gate; these tests establish
+that trust cheaply -- no sweep, every case well under a second.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.verify import (
+    AccuracyBound,
+    CholeskyProblem,
+    backward_error,
+    compare_to_golden,
+    dtype_pair,
+    exact_factor,
+    exact_kriging_pmse,
+    exact_loglik,
+    loglik_drift,
+    lookup_bound,
+    matern_problem,
+    policy_bound,
+    rel_frobenius,
+    save_golden,
+    spd_matrix,
+)
+from repro.verify.golden import load_golden
+from repro.core.precision import PrecisionPolicy
+
+
+# ---- generators -----------------------------------------------------------
+
+def test_spd_matrix_deterministic_and_conditioned():
+    a = np.asarray(spd_matrix(3, 64, cond=1e4), np.float64)
+    b = np.asarray(spd_matrix(3, 64, cond=1e4), np.float64)
+    np.testing.assert_array_equal(a, b)
+    # symmetric to fp32 rounding at the matrix's own scale
+    assert np.abs(a - a.T).max() < 1e-6 * np.abs(a).max()
+    eigs = np.linalg.eigvalsh(a)
+    assert eigs.min() > 0
+    # the spectrum is exactly log-spaced, so cond hits the target
+    assert eigs.max() / eigs.min() == pytest.approx(1e4, rel=1e-2)
+
+
+def test_spd_matrix_accepts_prng_key():
+    np.testing.assert_array_equal(
+        np.asarray(spd_matrix(jax.random.PRNGKey(5), 32)),
+        np.asarray(spd_matrix(jax.random.PRNGKey(5), 32)))
+
+
+def test_matern_problem_deterministic_and_spd():
+    p1 = matern_problem(64, "strong")
+    p2 = matern_problem(64, "strong")
+    np.testing.assert_array_equal(np.asarray(p1.cov), np.asarray(p2.cov))
+    np.testing.assert_array_equal(np.asarray(p1.z), np.asarray(p2.z))
+    assert isinstance(p1, CholeskyProblem)
+    assert p1.p == 64 // p1.nb
+    assert p1.name == "n64_strong"
+    evals = np.linalg.eigvalsh(np.asarray(p1.cov, np.float64))
+    assert evals.min() > 0
+
+
+def test_matern_regimes_differ():
+    weak = matern_problem(64, "weak")
+    strong = matern_problem(64, "strong")
+    # stronger correlation -> more off-diagonal mass
+    off = lambda p: np.abs(np.asarray(p.cov, np.float64)
+                           - np.diag(np.diag(p.cov))).sum()
+    assert off(strong) > off(weak)
+
+
+# ---- oracles --------------------------------------------------------------
+
+def test_exact_factor_matches_numpy_f64():
+    a = spd_matrix(1, 32, cond=100.0)
+    l = exact_factor(a)
+    assert l.dtype == np.float64
+    # jax and numpy block the fp64 factorization differently; agreement is
+    # to accumulated-rounding scale, far below any registry bound
+    np.testing.assert_allclose(
+        l, np.linalg.cholesky(np.asarray(a, np.float64)),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_exact_loglik_matches_direct_formula():
+    a = spd_matrix(2, 32, cond=10.0)
+    z = np.asarray(jax.random.normal(jax.random.PRNGKey(9), (32,)))
+    a64 = np.asarray(a, np.float64)
+    sign, logdet = np.linalg.slogdet(a64)
+    direct = (-0.5 * 32 * np.log(2 * np.pi) - 0.5 * logdet
+              - 0.5 * z @ np.linalg.solve(a64, z))
+    assert exact_loglik(a, z) == pytest.approx(direct, rel=1e-12)
+
+
+def test_exact_kriging_pmse_zero_when_truth_is_prediction():
+    a = spd_matrix(4, 32, cond=10.0)
+    z = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (32,)))
+    sigma_no = np.asarray(a, np.float64)[:4, :]   # predict 4 "new" points
+    mu = sigma_no @ np.linalg.solve(np.asarray(a, np.float64), z)
+    assert exact_kriging_pmse(a, z, sigma_no, mu) == pytest.approx(0.0, abs=1e-18)
+
+
+def test_error_metrics_zero_on_exact_inputs():
+    a = spd_matrix(7, 32, cond=10.0)
+    l = exact_factor(a)
+    assert rel_frobenius(l, l) == 0.0
+    assert backward_error(l, a) < 1e-7      # fp32 input, fp64 factor
+    assert loglik_drift(-123.456, -123.456) == 0.0
+
+
+def test_loglik_drift_normalization():
+    # |ref| < 1 -> absolute scale; large |ref| -> relative scale
+    assert loglik_drift(0.3, 0.1) == pytest.approx(0.2)
+    assert loglik_drift(-1010.0, -1000.0) == pytest.approx(0.01)
+
+
+# ---- bounds registry ------------------------------------------------------
+
+def test_dtype_pair_labels():
+    assert dtype_pair(PrecisionPolicy.full(jnp.float32)) == "f32"
+    assert dtype_pair(PrecisionPolicy.tpu(1)) == "f32/bf16"
+    assert dtype_pair(PrecisionPolicy.paper_cpu(1)) == "f64/f32"
+    assert dtype_pair(PrecisionPolicy.three_tier(1, 2)) == "f32/bf16/f8e4m3"
+    assert dtype_pair(PrecisionPolicy.dst(2)) == "f32/zero"
+
+
+def test_lookup_prefers_most_specific_key():
+    generic = lookup_bound("mixed", "f32/bf16", 2, "strong")
+    weak = lookup_bound("mixed", "f32/bf16", 2, "weak")
+    # the regime-specific weak entry is strictly tighter than the fallback
+    assert weak.factor_rel < generic.factor_rel
+
+
+def test_lookup_unknown_mode_raises():
+    with pytest.raises(KeyError, match="no registered bound"):
+        lookup_bound("quantum", "f4/f2")
+
+
+def test_policy_bound_roundtrip():
+    pol = PrecisionPolicy.tpu(2)
+    assert policy_bound(pol, "weak") is lookup_bound("mixed", "f32/bf16",
+                                                     2, "weak")
+
+
+def test_bound_violations():
+    bound = AccuracyBound(factor_rel=1e-3, loglik_drift=1e-4)
+    assert bound.violations({"factor_rel": 1e-4, "loglik_drift": 1e-5}) == []
+    msgs = bound.violations({"factor_rel": 1e-2, "loglik_drift": 1e-5})
+    assert len(msgs) == 1 and "factor_rel" in msgs[0]
+    # metrics without a registered limit are ignored
+    assert bound.violations({"pmse_rel": 1e9}) == []
+
+
+def test_bound_flags_nan_as_violation():
+    bound = AccuracyBound(factor_rel=1e-3)
+    msgs = bound.violations({"factor_rel": float("nan")})
+    assert len(msgs) == 1 and "non-finite" in msgs[0]
+    msgs = bound.violations({"factor_rel": math.inf})
+    assert len(msgs) == 1 and "non-finite" in msgs[0]
+
+
+# ---- golden gate ----------------------------------------------------------
+
+RECORDS = [
+    {"id": "chol/a", "factor_rel": 1e-4, "loglik_drift": 1e-5},
+    {"id": "kern/b", "max_abs": 1e-3},
+]
+
+
+def test_golden_roundtrip_and_clean_compare(tmp_path):
+    path = save_golden(RECORDS, tmp_path / "g.json")
+    golden = load_golden(path)
+    assert set(golden["records"]) == {"chol/a", "kern/b"}
+    assert compare_to_golden(RECORDS, golden) == []
+
+
+def test_golden_detects_drift(tmp_path):
+    golden = load_golden(save_golden(RECORDS, tmp_path / "g.json"))
+    moved = [dict(RECORDS[0], factor_rel=3e-4), RECORDS[1]]  # 3x > 2x slack
+    drifts = compare_to_golden(moved, golden)
+    assert len(drifts) == 1
+    assert drifts[0][0] == "chol/a" and "drifted" in drifts[0][1]
+    # within slack -> clean
+    ok = [dict(RECORDS[0], factor_rel=1.5e-4), RECORDS[1]]
+    assert compare_to_golden(ok, golden) == []
+
+
+def test_golden_floor_absorbs_noise_near_zero(tmp_path):
+    gold = [{"id": "kern/exact", "max_rel": 0.0}]
+    golden = load_golden(save_golden(gold, tmp_path / "g.json"))
+    # 0 * slack = 0, but the 1e-6 floor keeps epsilon-noise from flaking
+    assert compare_to_golden([{"id": "kern/exact", "max_rel": 1e-8}],
+                             golden) == []
+    drifts = compare_to_golden([{"id": "kern/exact", "max_rel": 1e-3}], golden)
+    assert len(drifts) == 1
+
+
+def test_golden_flags_coverage_changes(tmp_path):
+    golden = load_golden(save_golden(RECORDS, tmp_path / "g.json"))
+    drifts = compare_to_golden(RECORDS + [{"id": "new", "max_abs": 0.1}],
+                               golden)
+    assert [d[0] for d in drifts] == ["new"]
+    drifts = compare_to_golden(RECORDS[:1], golden)
+    assert [d[0] for d in drifts] == ["kern/b"]
+    assert "coverage lost" in drifts[0][1]
