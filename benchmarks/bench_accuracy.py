@@ -25,7 +25,7 @@ from repro.verify import (
 from repro.verify.bounds import dtype_pair, policy_bound
 from repro.verify.conformance import default_policies
 
-from .common import emit, time_call
+from .common import emit, predicted_flop_mix, time_call, xla_flops
 
 
 def run() -> None:
@@ -40,10 +40,17 @@ def run() -> None:
         l = np.asarray(fn(cov), np.float64)
         ll = float(loglik_from_factor(jnp.asarray(l, jnp.float32), prob.z))
         bound = policy_bound(pol, prob.regime)
+        # achieved (XLA-counted) FLOPs next to the static DAG prediction:
+        # a tile silently routed to the wrong tier moves the ratio, not
+        # just the timing column
+        mix = predicted_flop_mix(prob.n, prob.nb, pol)
+        achieved = xla_flops(lambda a, p=pol: tile_cholesky(a, prob.nb, p), cov)
+        if achieved is not None:
+            mix += f";xla_flops={achieved:.3e}"
         emit(f"acc_chol_{label}_{prob.name}", us,
              f"pair={dtype_pair(pol)};factor_rel={rel_frobenius(l, l_ref):.2e}"
              f";loglik_drift={loglik_drift(ll, ll_ref):.2e}"
-             f";factor_bound={bound.factor_rel:.0e}")
+             f";factor_bound={bound.factor_rel:.0e};{mix}")
 
     # kernel pairs: worst measured error per kernel across the sweep grid
     worst: dict[str, float] = {}

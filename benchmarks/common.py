@@ -6,6 +6,37 @@ import jax
 import numpy as np
 
 
+def predicted_flop_mix(n: int, nb: int, policy, variant: str | None = None) -> str:
+    """Derived-column fragment with the static DAG's per-tier FLOP mix.
+
+    The repro.analysis tile-DAG checker counts every POTRF/TRSM/SYRK/GEMM
+    the engine will emit, per execution tier -- so perf rows can print the
+    achieved numbers next to the statically predicted mix and a routing
+    regression (e.g. a band tile silently taking the lo path) shows up as
+    a mismatch, not just a timing blip.
+    """
+    from repro.analysis.dag import flop_report
+
+    if variant is None:
+        variant = "dst" if policy.mode == "dst" else "tile"
+    rep = flop_report(n, nb, policy, variant)
+    return (f"pred_hi_frac={rep['hi_frac']:.3f}"
+            f";pred_lo_frac={rep['lo_frac'] + rep['lo2_frac']:.3f}"
+            f";pred_flops={rep['total_flops']:.3e}"
+            f";cp_tasks={int(rep['critical_path_tasks'])}")
+
+
+def xla_flops(fn, *args) -> float | None:
+    """Compiled-module FLOP count, or None where cost_analysis is missing."""
+    try:
+        cost = jax.jit(fn).lower(*args).compile().cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        return float(cost["flops"])
+    except Exception:
+        return None
+
+
 def time_call(fn, *args, warmup=1, iters=3):
     """Median wall-clock microseconds per call of a jitted fn."""
     for _ in range(warmup):

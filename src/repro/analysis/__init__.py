@@ -1,0 +1,23 @@
+"""Static analysis for the mixed-precision tile Cholesky (CI gate).
+
+Layer 1 (`lint`): AST precision-flow linter -- dtype discipline as named,
+suppressable rules.  Layer 2 (`dag`): symbolic tile-DAG extraction with
+RAW/WAR/WAW hazard and precision-edge checking plus per-tier FLOP /
+critical-path reports.  `python -m repro.analysis --check` is the blocking
+CI entry point; see DESIGN.md "Static analysis".
+"""
+
+from .dag import (  # noqa: F401
+    DagReport,
+    HazardError,
+    Task,
+    analyze,
+    build_dag,
+    check_dag,
+    dst_dag,
+    flop_report,
+    panel_dag,
+    storage_tier,
+    tile_dag,
+)
+from .lint import Finding, lint_source, lint_tree  # noqa: F401

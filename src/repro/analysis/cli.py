@@ -1,0 +1,128 @@
+"""CLI gate: `python -m repro.analysis --check`.
+
+Runs both layers and exits non-zero on any violation:
+
+  1. the precision-flow linter over src/repro/ (findings must be fixed,
+     pragma-suppressed, or baselined with a reason);
+  2. the tile-DAG hazard checker over every (variant x policy x p) cell of
+     the conformance matrix -- tile/panel/dst at p in {1, 4, 8} under the
+     full / mixed / three_tier policies.
+
+This is the blocking `static-analysis` CI job (fast path: pure AST + a few
+thousand symbolic tasks, no JAX numerics are executed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .baseline import BASELINE_PATH, load_baseline, split_baselined, update_baseline
+from .dag import HazardError, analyze
+from .lint import lint_tree
+
+SRC_ROOT = Path(__file__).resolve().parents[1]   # .../src/repro
+
+DAG_PS = (1, 4, 8)
+DAG_VARIANTS = ("tile", "panel", "dst")
+
+
+def _dag_policies():
+    from ..core.precision import PrecisionPolicy
+    return {
+        "full": PrecisionPolicy.full(),
+        "mixed": PrecisionPolicy.tpu(2),
+        "three_tier": PrecisionPolicy.three_tier(1, 3),
+    }
+
+
+def run_lint(root: Path, *, update: bool = False) -> int:
+    findings = lint_tree(root)
+    if update:
+        n = update_baseline(findings)
+        print(f"baseline: wrote {n} entries to {BASELINE_PATH} "
+              "(fill in any TODO reasons before committing)")
+        return 0
+    try:
+        entries = load_baseline()
+    except ValueError as e:
+        print(f"BASELINE ERROR: {e}")
+        return 1
+    new, old, unused = split_baselined(findings, entries)
+    for f in new:
+        print(f"LINT: {f.render()}")
+    if unused:
+        for e in unused:
+            print(f"note: stale baseline entry (fixed? remove it): "
+                  f"{e['rule']} {e['path']} {e['code']!r}")
+    print(f"lint: {len(findings)} findings "
+          f"({len(old)} baselined, {len(new)} new) over {root}")
+    return 1 if new else 0
+
+
+def run_dag(*, verbose: bool = False, as_json: bool = False) -> int:
+    rows, failures = [], 0
+    for variant in DAG_VARIANTS:
+        for label, policy in _dag_policies().items():
+            for p in DAG_PS:
+                try:
+                    rep = analyze(variant, p, policy, label=label)
+                except HazardError as e:
+                    print(f"DAG HAZARD: {e}")
+                    failures += 1
+                    continue
+                fr = rep.tier_fractions()
+                rows.append({
+                    "variant": variant, "policy": label, "p": p,
+                    "tasks": rep.n_tasks, "converts": rep.n_converts,
+                    "hi_frac": round(fr.get("hi", 0.0), 4),
+                    "lo_frac": round(fr.get("lo", 0.0), 4),
+                    "lo2_frac": round(fr.get("lo2", 0.0), 4),
+                    "critical_path_tasks": rep.critical_path_tasks,
+                    "critical_path_flops_nb3": round(
+                        rep.critical_path_flops, 3),
+                })
+    if as_json:
+        print(json.dumps(rows, indent=2))
+    elif verbose:
+        hdr = ("variant", "policy", "p", "tasks", "converts",
+               "hi_frac", "lo_frac", "lo2_frac", "critical_path_tasks")
+        print(" ".join(f"{h:>12}" for h in hdr))
+        for r in rows:
+            print(" ".join(f"{r[h]!s:>12}" for h in hdr))
+    checked = len(rows) + failures
+    print(f"dag: {checked} (variant, policy, p) cells checked, "
+          f"{failures} hazard/policy violations")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Precision-flow linter + tile-DAG hazard checker")
+    parser.add_argument("--check", action="store_true",
+                        help="run both layers, exit non-zero on violations "
+                             "(default action)")
+    parser.add_argument("--lint-only", action="store_true")
+    parser.add_argument("--dag-only", action="store_true")
+    parser.add_argument("--root", type=Path, default=SRC_ROOT,
+                        help="package root to lint (default: src/repro)")
+    parser.add_argument("--update-baseline", action="store_true",
+                        help="rewrite baseline.json from current findings "
+                             "(keeps existing reasons)")
+    parser.add_argument("--verbose", action="store_true",
+                        help="print the per-cell DAG report table")
+    parser.add_argument("--json", action="store_true",
+                        help="emit the DAG report as JSON")
+    args = parser.parse_args(argv)
+
+    rc = 0
+    if not args.dag_only:
+        rc |= run_lint(args.root, update=args.update_baseline)
+    if not args.lint_only and not args.update_baseline:
+        rc |= run_dag(verbose=args.verbose, as_json=args.json)
+    if rc == 0:
+        print("static analysis: OK")
+    return rc

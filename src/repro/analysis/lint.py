@@ -1,0 +1,423 @@
+"""Precision-flow linter: AST rules that enforce the paper's dtype discipline.
+
+The mixed-precision claim (fp64 band / fp32-bf16 off-band "without any
+deterioration of numerical accuracy") rests on every cast flowing from a
+`PrecisionPolicy`, never from an ad-hoc literal.  This module makes that a
+machine-checked invariant over `src/repro/`:
+
+  no-implicit-downcast
+      In the policy-governed numerics packages (`core/`, `covariance/`)
+      every `.astype(...)` argument must be an expression (a policy field,
+      a dtype variable, `x.dtype`), never a literal `jnp.<dtype>` /
+      `"dtype"` constant.  Elsewhere only *narrowing* literals (bf16,
+      fp16, fp8, int8, int4) are flagged -- widening to fp32 is the
+      documented MXU-accumulate idiom and stays legal.
+
+  accum-dtype
+      A matmul-family call (`jnp.matmul`/`dot`/`einsum`/`tensordot`,
+      `lax.dot_general`) whose operand was cast to a lo tier (literal
+      narrow dtype, `*.lo`/`*.lo2`, or a local bound to one) must pass
+      `preferred_element_type=...` explicitly; and that accumulator must
+      not itself be a narrow literal.  This is the paper's "SP compute,
+      wide accumulate" contract (`lo_matmul` is the blessed helper).
+
+  x64-guard
+      `jnp.float64` may only appear in modules that visibly deal with x64
+      (source mentions `enable_x64`, or carries a `# repro: x64-module`
+      marker).  Everywhere else fp64 silently truncates to fp32 under
+      default JAX config -- the worst kind of precision bug, invisible
+      until the statistics drift.
+
+  pallas-blockspec-contract
+      Structural conformance inside `kernels/`: each kernel package's
+      `ops.py` public entry points must have a matching `<name>_ref` in
+      `ref.py` with identical positional parameters and a ref keyword set
+      that is a subset of the op's; every `pl.pallas_call` must have
+      index_map arity == grid rank, BlockSpec block-shape rank ==
+      index-map output rank, and len(out_specs) == len(out_shape).
+      (Out-dtype equality is enforced dynamically by the verify/
+      conformance sweep; the static layer covers the shape plumbing.)
+
+Suppression: per-line `# repro: disable=<rule>[,<rule>] -- reason` pragmas
+(any line of a multi-line statement), or entries in the committed
+`baseline.json` (see baseline.py) for grandfathered findings.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Iterable
+
+RULES = (
+    "no-implicit-downcast",
+    "accum-dtype",
+    "x64-guard",
+    "pallas-blockspec-contract",
+)
+
+# Packages where ANY literal-dtype astype is a violation (dtypes must flow
+# from a PrecisionPolicy or a dtype-valued variable/parameter).
+STRICT_PACKAGES = ("core", "covariance")
+
+# Narrowing storage dtypes: flagged as literals everywhere.
+NARROW_DTYPES = frozenset({
+    "bfloat16", "float16", "float8_e4m3fn", "float8_e5m2", "float8_e4m3",
+    "float8_e5m2fnuz", "float8_e4m3fnuz", "int8", "int4", "uint8", "uint4",
+})
+# Additional literals banned in STRICT_PACKAGES (all float literals).
+FLOAT_DTYPES = NARROW_DTYPES | {"float32", "float64"}
+
+MATMUL_FUNCS = frozenset({"matmul", "dot", "einsum", "tensordot", "dot_general"})
+
+# Attribute / name spellings that mark a cast target as "lo tier".
+LO_TIER_NAMES = frozenset({"lo", "lo2", "solve_dtype"})
+
+_PRAGMA_RE = re.compile(
+    r"#\s*repro:\s*disable=([A-Za-z0-9_\-]+(?:\s*,\s*[A-Za-z0-9_\-]+)*)")
+_X64_MODULE_RE = re.compile(r"enable_x64|#\s*repro:\s*x64-module")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # repo-relative posix path
+    line: int
+    message: str
+    code: str          # stripped source line (baseline match key)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# pragma handling
+# ---------------------------------------------------------------------------
+
+def pragma_lines(source: str) -> dict[int, frozenset[str]]:
+    """line number (1-based) -> set of rule names disabled on that line."""
+    out: dict[int, frozenset[str]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA_RE.search(text)
+        if m:
+            rules = frozenset(r.strip() for r in m.group(1).split(",") if r.strip())
+            out[i] = rules
+    return out
+
+
+def _suppressed(pragmas: dict[int, frozenset[str]], node: ast.AST, rule: str) -> bool:
+    lo = getattr(node, "lineno", None)
+    hi = getattr(node, "end_lineno", lo)
+    if lo is None:
+        return False
+    return any(rule in pragmas.get(ln, ()) for ln in range(lo, (hi or lo) + 1))
+
+
+# ---------------------------------------------------------------------------
+# small AST helpers
+# ---------------------------------------------------------------------------
+
+def _dtype_literal_name(node: ast.AST) -> str | None:
+    """Return the dtype name if `node` is a literal dtype expression."""
+    if isinstance(node, ast.Attribute):
+        # jnp.bfloat16 / np.float32 / jax.numpy.float16
+        base = node.value
+        base_ok = (isinstance(base, ast.Name) and base.id in ("jnp", "np", "numpy")) or (
+            isinstance(base, ast.Attribute) and base.attr == "numpy")
+        if base_ok and node.attr in FLOAT_DTYPES:
+            return node.attr
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        if node.value in FLOAT_DTYPES:
+            return node.value
+    return None
+
+
+def _is_lo_tier_expr(node: ast.AST, lo_vars: set[str]) -> bool:
+    """True if the expression names a lo-tier dtype (policy.lo, `lo`, narrow
+    literal, or a local variable bound to one)."""
+    name = _dtype_literal_name(node)
+    if name is not None and name in NARROW_DTYPES:
+        return True
+    if isinstance(node, ast.Attribute) and node.attr in LO_TIER_NAMES:
+        return True
+    if isinstance(node, ast.Name) and (node.id in LO_TIER_NAMES or node.id in lo_vars):
+        return True
+    return False
+
+
+def _contains_lo_cast(node: ast.AST, lo_vars: set[str], lo_arrays: set[str]) -> bool:
+    """Expression contains `.astype(<lo>)` or a name bound to a lo-cast value."""
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.Call) and isinstance(sub.func, ast.Attribute)
+                and sub.func.attr == "astype" and sub.args
+                and _is_lo_tier_expr(sub.args[0], lo_vars)):
+            return True
+        if isinstance(sub, ast.Name) and sub.id in lo_arrays:
+            return True
+    return False
+
+
+def _func_attr_name(func: ast.AST) -> str | None:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def _lambda_arity(node: ast.Lambda) -> int:
+    a = node.args
+    return len(a.posonlyargs) + len(a.args)
+
+
+def _static_tuple_len(node: ast.AST) -> int | None:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# per-module rule passes
+# ---------------------------------------------------------------------------
+
+def _check_downcasts(tree: ast.AST, relpath: str, source_lines: list[str],
+                     pragmas, strict: bool) -> list[Finding]:
+    banned = FLOAT_DTYPES if strict else NARROW_DTYPES
+    findings = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "astype" and node.args):
+            continue
+        name = _dtype_literal_name(node.args[0])
+        if name is None or name not in banned:
+            continue
+        rule = "no-implicit-downcast"
+        if _suppressed(pragmas, node, rule):
+            continue
+        where = ("policy-scoped module: dtype must flow from a PrecisionPolicy "
+                 "field or dtype variable" if strict
+                 else "narrowing cast must flow from a policy/tier variable")
+        findings.append(Finding(
+            rule, relpath, node.lineno,
+            f"literal dtype astype({name}) -- {where}",
+            source_lines[node.lineno - 1].strip()))
+    return findings
+
+
+def _check_accum(tree: ast.AST, relpath: str, source_lines: list[str],
+                 pragmas) -> list[Finding]:
+    findings = []
+    for fn in [n for n in ast.walk(tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        # taint-track simple local assignments: dtype vars bound to lo tiers
+        # and array vars bound to lo-cast expressions
+        lo_vars: set[str] = set()
+        lo_arrays: set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                tgt = node.targets[0].id
+                if _is_lo_tier_expr(node.value, lo_vars):
+                    lo_vars.add(tgt)
+                elif _contains_lo_cast(node.value, lo_vars, lo_arrays):
+                    lo_arrays.add(tgt)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = _func_attr_name(node.func)
+            if fname not in MATMUL_FUNCS:
+                continue
+            kw = {k.arg: k.value for k in node.keywords if k.arg}
+            pet = kw.get("preferred_element_type")
+            if pet is not None:
+                pet_name = _dtype_literal_name(pet)
+                if pet_name in NARROW_DTYPES \
+                        and not _suppressed(pragmas, node, "accum-dtype"):
+                    findings.append(Finding(
+                        "accum-dtype", relpath, node.lineno,
+                        f"narrow literal accumulator preferred_element_type="
+                        f"{pet_name}; use policy.accum_dtype",
+                        source_lines[node.lineno - 1].strip()))
+                continue
+            if any(_contains_lo_cast(a, lo_vars, lo_arrays) for a in node.args) \
+                    and not _suppressed(pragmas, node, "accum-dtype"):
+                findings.append(Finding(
+                    "accum-dtype", relpath, node.lineno,
+                    f"lo-precision operand feeds {fname} without an explicit "
+                    "preferred_element_type (policy.accum_dtype)",
+                    source_lines[node.lineno - 1].strip()))
+    return findings
+
+
+def _check_x64(tree: ast.AST, relpath: str, source: str,
+               source_lines: list[str], pragmas) -> list[Finding]:
+    if _X64_MODULE_RE.search(source):
+        return []
+    findings = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr == "float64":
+            base = node.value
+            if isinstance(base, ast.Name) and base.id == "jnp" or (
+                    isinstance(base, ast.Attribute) and base.attr == "numpy"
+                    and isinstance(base.value, ast.Name) and base.value.id == "jax"):
+                if _suppressed(pragmas, node, "x64-guard"):
+                    continue
+                findings.append(Finding(
+                    "x64-guard", relpath, node.lineno,
+                    "jnp.float64 outside an x64-enabled module (silently "
+                    "truncates to fp32 under default JAX config)",
+                    source_lines[node.lineno - 1].strip()))
+    return findings
+
+
+def _check_pallas_calls(tree: ast.AST, relpath: str, source_lines: list[str],
+                        pragmas) -> list[Finding]:
+    """Structural checks on every pl.pallas_call in a kernel module."""
+    findings = []
+
+    def flag(node, msg):
+        if not _suppressed(pragmas, node, "pallas-blockspec-contract"):
+            findings.append(Finding(
+                "pallas-blockspec-contract", relpath, node.lineno, msg,
+                source_lines[node.lineno - 1].strip()))
+
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _func_attr_name(node.func) == "pallas_call"):
+            continue
+        kw = {k.arg: k.value for k in node.keywords if k.arg}
+        grid = kw.get("grid")
+        grid_rank = _static_tuple_len(grid) if grid is not None else 0
+        specs: list[ast.Call] = []
+        for key in ("in_specs", "out_specs"):
+            v = kw.get(key)
+            if v is None:
+                continue
+            elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+            for e in elts:
+                if isinstance(e, ast.Call) and _func_attr_name(e.func) == "BlockSpec":
+                    specs.append(e)
+        for spec in specs:
+            if len(spec.args) < 2 or not isinstance(spec.args[1], ast.Lambda):
+                continue
+            lam = spec.args[1]
+            arity = _lambda_arity(lam)
+            if grid_rank is not None and arity != grid_rank:
+                flag(spec, f"BlockSpec index_map takes {arity} args but the "
+                           f"grid has rank {grid_rank}")
+            blk_rank = _static_tuple_len(spec.args[0])
+            body = lam.body
+            out_rank = _static_tuple_len(body)
+            if out_rank is None and not isinstance(body, ast.Tuple):
+                out_rank = 1  # scalar index -> rank-1 block
+            if blk_rank is not None and out_rank is not None and blk_rank != out_rank:
+                flag(spec, f"BlockSpec block shape has rank {blk_rank} but its "
+                           f"index_map yields rank {out_rank}")
+        out_shape = kw.get("out_shape")
+        out_specs = kw.get("out_specs")
+        n_shapes = _static_tuple_len(out_shape) if out_shape is not None else None
+        n_specs = _static_tuple_len(out_specs) if out_specs is not None else None
+        if n_shapes is not None and n_specs is not None and n_shapes != n_specs:
+            flag(node, f"out_shape declares {n_shapes} outputs but out_specs "
+                       f"declares {n_specs}")
+    return findings
+
+
+def _public_functions(tree: ast.AST) -> dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body if isinstance(n, ast.FunctionDef)
+            and not n.name.startswith("_")}  # type: ignore[union-attr]
+
+
+def _param_names(fn: ast.FunctionDef) -> tuple[list[str], set[str]]:
+    pos = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    kwonly = {a.arg for a in fn.args.kwonlyargs}
+    return pos, kwonly
+
+
+def check_kernel_package(pkg_dir: Path, root: Path) -> list[Finding]:
+    """ops.py <-> ref.py signature conformance for one kernel package."""
+    ops_path, ref_path = pkg_dir / "ops.py", pkg_dir / "ref.py"
+    findings = []
+    rel_ops = ops_path.relative_to(root.parent).as_posix()
+    if not ops_path.exists() or not ref_path.exists():
+        missing = "ref.py" if ops_path.exists() else "ops.py"
+        return [Finding("pallas-blockspec-contract",
+                        pkg_dir.relative_to(root.parent).as_posix(), 1,
+                        f"kernel package missing {missing} (every kernel ships "
+                        "a jitted wrapper AND a pure-jnp oracle)", "")]
+    ops_src = ops_path.read_text()
+    ref_src = ref_path.read_text()
+    ops_fns = _public_functions(ast.parse(ops_src))
+    ref_fns = _public_functions(ast.parse(ref_src))
+    ops_pragmas = pragma_lines(ops_src)
+    ops_lines = ops_src.splitlines()
+    matched = 0
+    for name, fn in ops_fns.items():
+        ref = ref_fns.get(name + "_ref")
+        if ref is None:
+            continue
+        matched += 1
+        op_pos, op_kw = _param_names(fn)
+        ref_pos, ref_kw = _param_names(ref)
+        if _suppressed(ops_pragmas, fn, "pallas-blockspec-contract"):
+            continue
+        if op_pos != ref_pos:
+            findings.append(Finding(
+                "pallas-blockspec-contract", rel_ops, fn.lineno,
+                f"{name}: positional params {op_pos} != {name}_ref's {ref_pos}",
+                ops_lines[fn.lineno - 1].strip()))
+        extra = ref_kw - op_kw
+        if extra:
+            findings.append(Finding(
+                "pallas-blockspec-contract", rel_ops, fn.lineno,
+                f"{name}: ref requires keywords {sorted(extra)} the op "
+                "wrapper does not accept",
+                ops_lines[fn.lineno - 1].strip()))
+    if not matched:
+        findings.append(Finding(
+            "pallas-blockspec-contract", rel_ops, 1,
+            "no ops.py public function has a matching <name>_ref oracle in "
+            "ref.py", ""))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+def lint_source(source: str, relpath: str) -> list[Finding]:
+    """Lint one module's source text.  relpath is repo-relative posix."""
+    tree = ast.parse(source)
+    lines = source.splitlines()
+    pragmas = pragma_lines(source)
+    parts = Path(relpath).parts
+    pkg = parts[1] if len(parts) > 1 and parts[0] == "repro" else (
+        parts[0] if parts else "")
+    strict = pkg in STRICT_PACKAGES
+    findings = []
+    findings += _check_downcasts(tree, relpath, lines, pragmas, strict)
+    findings += _check_accum(tree, relpath, lines, pragmas)
+    findings += _check_x64(tree, relpath, source, lines, pragmas)
+    if pkg == "kernels":
+        findings += _check_pallas_calls(tree, relpath, lines, pragmas)
+    return findings
+
+
+def lint_tree(root: Path) -> list[Finding]:
+    """Lint every module under `root` (the src/repro directory)."""
+    root = Path(root)
+    findings: list[Finding] = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root.parent).as_posix()
+        if rel.startswith("repro/analysis/"):
+            continue
+        findings.extend(lint_source(path.read_text(), rel))
+    kernels = root / "kernels"
+    if kernels.is_dir():
+        for pkg in sorted(p for p in kernels.iterdir() if p.is_dir()):
+            if pkg.name.startswith("__"):
+                continue
+            findings.extend(check_kernel_package(pkg, root))
+    return findings

@@ -59,7 +59,7 @@ def build_covariance_distributed(locs, theta, *, nb: int,
     lo = policy.lo if policy.mode != "full" else policy.hi
     theta1, theta2 = theta[0], theta[1]
 
-    locs32 = locs.astype(jnp.float32)
+    locs_hi = locs.astype(hi)  # coord precision follows the band tier
 
     def _corr(r):
         x = r / theta2
@@ -73,8 +73,8 @@ def build_covariance_distributed(locs, theta, *, nb: int,
             raise ValueError("distributed cov-gen uses half-integer nu")
         return theta1 * jnp.where(r == 0.0, 1.0, c)
 
-    norms = jnp.sum(locs32 * locs32, axis=-1)
-    cross = _c_mat(locs32 @ locs32.T)
+    norms = jnp.sum(locs_hi * locs_hi, axis=-1)
+    cross = _c_mat(locs_hi @ locs_hi.T)
     d2 = jnp.maximum(norms[:, None] + norms[None, :] - 2.0 * cross, 0.0)
     cov = _corr(jnp.sqrt(d2))
 
@@ -87,7 +87,7 @@ def build_covariance_distributed(locs, theta, *, nb: int,
     # hi band tiles built DIRECTLY from locations (slicing the sharded
     # (n, n) cov into 512 tiles gathered ~137 GB replicated stacks --
     # dry-run iteration D9b); the vmapped per-diagonal build stays local
-    locs_t = locs32.reshape(p, nb, 2)
+    locs_t = locs_hi.reshape(p, nb, 2)
 
     def tile_cov(la, lb):
         dd = jnp.maximum(

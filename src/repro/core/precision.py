@@ -38,6 +38,27 @@ class PrecisionPolicy:
             raise ValueError(f"unknown policy mode {self.mode!r}")
         if self.diag_thick < 1:
             raise ValueError(f"diag_thick must be >= 1, got {self.diag_thick}")
+        for field in ("solve_dtype", "accum_dtype"):
+            value = getattr(self, field)
+            try:
+                dt = jnp.dtype(value)
+            except TypeError as e:
+                raise ValueError(f"{field} is not a dtype: {value!r}") from e
+            if not jnp.issubdtype(dt, jnp.floating):
+                raise ValueError(
+                    f"{field} must be a floating dtype, got {dt}")
+        # a narrower accumulator than the lo storage would silently round
+        # every MXU partial product below the paper's SP error model
+        try:
+            lo_bits = jnp.finfo(jnp.dtype(self.lo)).bits
+        except (TypeError, ValueError):
+            lo_bits = None  # non-float lo is caught by downstream tile math
+        accum_bits = jnp.finfo(jnp.dtype(self.accum_dtype)).bits
+        if lo_bits is not None and accum_bits < lo_bits:
+            raise ValueError(
+                f"accum_dtype ({jnp.dtype(self.accum_dtype)}, {accum_bits} "
+                f"bits) must be at least as wide as lo "
+                f"({jnp.dtype(self.lo)}, {lo_bits} bits)")
         if self.mode == "three_tier":
             if self.lo2 is None:
                 raise ValueError("three_tier policy needs a lo2 dtype")

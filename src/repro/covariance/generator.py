@@ -34,12 +34,14 @@ class Dataset(NamedTuple):
     metric: str
 
 
-def random_locations(key, n: int, *, lo: float = 0.0, hi: float = 1.0):
+def random_locations(key, n: int, *, lo: float = 0.0, hi: float = 1.0,
+                     dtype=jnp.float32):
     """Irregular perturbed-grid locations in (lo, hi)^2 (ExaGeoStat style)."""
     m = int(jnp.ceil(jnp.sqrt(n)))
     xs, ys = jnp.meshgrid(jnp.arange(m), jnp.arange(m), indexing="ij")
-    grid = jnp.stack([xs.reshape(-1), ys.reshape(-1)], axis=-1).astype(jnp.float32)
-    jitter = jax.random.uniform(key, (m * m, 2), minval=-0.4, maxval=0.4)
+    grid = jnp.stack([xs.reshape(-1), ys.reshape(-1)], axis=-1).astype(dtype)
+    jitter = jax.random.uniform(key, (m * m, 2), minval=-0.4, maxval=0.4,
+                                dtype=dtype)
     locs = (grid + 0.5 + jitter) / m  # in (0, 1)^2
     locs = locs[:n]
     return lo + locs * (hi - lo)

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _mp_syrk_kernel(p_i_ref, p_j_ref, out_ref, *, band_blocks: int, nk: int):
+def _mp_syrk_kernel(p_i_ref, p_j_ref, out_ref, *, band_blocks: int, nk: int,
+                    hi_dtype, lo_dtype, accum_dtype):
     i = pl.program_id(0)
     j = pl.program_id(1)
     k = pl.program_id(2)
@@ -35,33 +36,38 @@ def _mp_syrk_kernel(p_i_ref, p_j_ref, out_ref, *, band_blocks: int, nk: int):
 
     @pl.when(in_band)
     def _hi():
-        a = p_i_ref[...].astype(jnp.float32)
-        b = p_j_ref[...].astype(jnp.float32)
-        out_ref[...] += jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+        a = p_i_ref[...].astype(hi_dtype)
+        b = p_j_ref[...].astype(hi_dtype)
+        out_ref[...] += jnp.dot(a, b.T, preferred_element_type=accum_dtype)
 
     @pl.when(jnp.logical_not(in_band))
     def _lo():
-        a = p_i_ref[...].astype(jnp.bfloat16)
-        b = p_j_ref[...].astype(jnp.bfloat16)
-        acc = jnp.dot(a, b.T, preferred_element_type=jnp.float32)
-        # bf16 storage rounding (the paper's SP tile store)
-        out_ref[...] += acc.astype(jnp.bfloat16).astype(jnp.float32)
+        a = p_i_ref[...].astype(lo_dtype)
+        b = p_j_ref[...].astype(lo_dtype)
+        acc = jnp.dot(a, b.T, preferred_element_type=accum_dtype)
+        # lo storage rounding (the paper's SP tile store)
+        out_ref[...] += acc.astype(lo_dtype).astype(out_ref.dtype)
 
 
 def mp_syrk_pallas(p, *, band_blocks: int, bm: int = 128, bk: int = 128,
-                   interpret: bool = True):
-    """U = P P^T with banded precision.  p: (m, kdim) fp32 -> (m, m) fp32.
+                   hi_dtype=jnp.float32, lo_dtype=jnp.bfloat16,
+                   accum_dtype=jnp.float32, interpret: bool = True):
+    """U = P P^T with banded precision.  p: (m, kdim) fp32 -> (m, m) hi.
 
-    Off-band blocks carry bf16-rounded values (per k-step), matching the lo
-    storage semantics of the panel engine.
+    Off-band blocks carry lo-rounded values (per k-step), matching the lo
+    storage semantics of the panel engine.  The {hi, lo, accum} routing is
+    a PrecisionPolicy projection: pass policy.hi / policy.lo /
+    policy.accum_dtype to run the kernel under a non-default pair.
     """
     m, kdim = p.shape
     assert m % bm == 0 and kdim % bk == 0, (m, bm, kdim, bk)
     nk = kdim // bk
     grid = (m // bm, m // bm, nk)
     return pl.pallas_call(
-        functools.partial(_mp_syrk_kernel, band_blocks=band_blocks, nk=nk),
-        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        functools.partial(_mp_syrk_kernel, band_blocks=band_blocks, nk=nk,
+                          hi_dtype=hi_dtype, lo_dtype=lo_dtype,
+                          accum_dtype=accum_dtype),
+        out_shape=jax.ShapeDtypeStruct((m, m), hi_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),

@@ -3,12 +3,16 @@
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from .mp_gemm import mp_syrk_pallas
 
 
-@partial(jax.jit, static_argnames=("band_blocks", "bm", "bk", "interpret"))
+@partial(jax.jit, static_argnames=("band_blocks", "bm", "bk", "hi_dtype",
+                                   "lo_dtype", "accum_dtype", "interpret"))
 def mp_syrk(p, *, band_blocks: int, bm: int = 128, bk: int = 128,
-            interpret: bool = True):
+            hi_dtype=jnp.float32, lo_dtype=jnp.bfloat16,
+            accum_dtype=jnp.float32, interpret: bool = True):
     return mp_syrk_pallas(p, band_blocks=band_blocks, bm=bm, bk=bk,
-                          interpret=interpret)
+                          hi_dtype=hi_dtype, lo_dtype=lo_dtype,
+                          accum_dtype=accum_dtype, interpret=interpret)

@@ -4,7 +4,9 @@ import numpy as np
 import jax.numpy as jnp
 
 
-def mp_syrk_ref(p, *, band_blocks: int, bm: int = 128, bk: int = 128):
+def mp_syrk_ref(p, *, band_blocks: int, bm: int = 128, bk: int = 128,
+                hi_dtype=jnp.float32, lo_dtype=jnp.bfloat16,
+                accum_dtype=jnp.float32):
     """Blockwise reference with identical precision routing and k-loop
     rounding order as the kernel."""
     m, kdim = p.shape
@@ -19,11 +21,14 @@ def mp_syrk_ref(p, *, band_blocks: int, bm: int = 128, bk: int = 128):
                 a = p[i * bm:(i + 1) * bm, k * bk:(k + 1) * bk]
                 b = p[j * bm:(j + 1) * bm, k * bk:(k + 1) * bk]
                 if abs(i - j) < band_blocks:
-                    acc += a @ b.T
+                    ah = jnp.asarray(a).astype(hi_dtype)
+                    bh = jnp.asarray(b).astype(hi_dtype)
+                    d = jnp.matmul(ah, bh.T, preferred_element_type=accum_dtype)
+                    acc += np.asarray(d, np.float32)
                 else:
-                    a16 = jnp.asarray(a).astype(jnp.bfloat16)
-                    b16 = jnp.asarray(b).astype(jnp.bfloat16)
-                    d = jnp.matmul(a16, b16.T, preferred_element_type=jnp.float32)
-                    acc += np.asarray(d.astype(jnp.bfloat16).astype(jnp.float32))
+                    alo = jnp.asarray(a).astype(lo_dtype)
+                    blo = jnp.asarray(b).astype(lo_dtype)
+                    d = jnp.matmul(alo, blo.T, preferred_element_type=accum_dtype)
+                    acc += np.asarray(d.astype(lo_dtype), np.float32)
             out[i * bm:(i + 1) * bm, j * bm:(j + 1) * bm] = acc
-    return jnp.asarray(out)
+    return jnp.asarray(out).astype(hi_dtype)

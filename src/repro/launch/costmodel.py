@@ -277,3 +277,42 @@ def geostat_cell_cost(n: int, nb: int, diag_thick: int, *, chips: int,
                     model_flops=chol,
                     detail={"band_frac": band_frac, "p": p, "t": t,
                             "lo_flops": lo_flops, "hi_flops": hi_flops})
+
+
+# MXU throughput weights relative to bf16 on v5e: fp32 ~6x, fp8 ~0.5x.
+_TIER_WEIGHT = {"hi": 6.0, "lo": 1.0, "lo2": 0.5}
+
+
+def geostat_dag_cost(n: int, nb: int, policy, *, chips: int,
+                     variant: str = "tile") -> CellCost:
+    """Exact-count sibling of geostat_cell_cost, fed by the static task DAG.
+
+    geostat_cell_cost models the band split with a closed-form band_frac
+    over an idealized n^3/3; this variant instead sums the POTRF/TRSM/
+    SYRK/GEMM tasks the engine actually emits (repro.analysis.dag), so the
+    per-tier mix, conversion traffic, and critical path are exact.  The
+    same x6 fp32-on-MXU weighting maps them to bf16-equivalent FLOPs.
+    """
+    from ..analysis.dag import flop_report
+
+    rep = flop_report(n, nb, policy, variant)
+    flops = sum(rep[f"{t}_flops"] * w for t, w in _TIER_WEIGHT.items())
+    # dlag2s/sconv2d traffic: one nb x nb tile read + write per conversion
+    convert_bytes = rep["convert_tiles"] * nb * nb * (BF16 + F32)
+    p = n // nb
+    t = min(policy.diag_thick, p)
+    off_bytes = n * n / 2 * BF16
+    band_bytes = n * t * nb * F32
+    hbm = off_bytes * p + band_bytes * p + convert_bytes
+    coll_panel = sum((n - (k + 1) * nb) * nb * BF16 * 2 for k in range(p))
+    coll = coll_panel / max(chips ** 0.5, 1)
+    return CellCost(flops=flops, hbm_bytes=hbm,
+                    collective_bytes_per_chip=coll,
+                    model_flops=n ** 3 / 3.0,
+                    detail={"hi_frac": rep["hi_frac"],
+                            "lo_frac": rep["lo_frac"],
+                            "lo2_frac": rep["lo2_frac"],
+                            "total_flops": rep["total_flops"],
+                            "critical_path_flops": rep["critical_path_flops"],
+                            "critical_path_tasks": rep["critical_path_tasks"],
+                            "convert_tiles": rep["convert_tiles"]})

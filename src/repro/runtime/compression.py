@@ -22,11 +22,11 @@ import jax.numpy as jnp
 
 def _quantize_leaf(g, mode):
     if mode == "bf16":
-        q = g.astype(jnp.bfloat16)
+        q = g.astype(jnp.bfloat16)  # repro: disable=no-implicit-downcast -- mode="bf16" wire format
         return q, q.astype(jnp.float32)
     if mode == "int8":
         scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
-        q = jnp.round(g / scale).astype(jnp.int8)
+        q = jnp.round(g / scale).astype(jnp.int8)  # repro: disable=no-implicit-downcast -- mode="int8" wire format
         return (q, scale), q.astype(jnp.float32) * scale
     raise ValueError(mode)
 

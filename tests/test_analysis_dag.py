@@ -1,0 +1,261 @@
+"""Fixture tests for the tile-DAG hazard checker (repro.analysis.dag).
+
+Two directions of evidence:
+
+  * soundness of the engines -- every (variant, policy, p) cell of the
+    conformance matrix builds a hazard-free, precision-consistent DAG whose
+    totals match the closed-form tile-Cholesky counts (p^3/3 nb^3 units,
+    critical path 3p-2 tasks);
+
+  * power of the checker -- corrupted task streams (reordered factor,
+    duplicate update, dropped promote, skipped update, write-after-factor,
+    no-op convert) each raise HazardError.  Without these, a checker that
+    accepts everything would pass the matrix trivially.
+"""
+
+import pytest
+
+from repro.analysis.dag import (
+    HI,
+    LO,
+    LO2,
+    HazardError,
+    Task,
+    analyze,
+    build_dag,
+    check_dag,
+    flop_report,
+    storage_tier,
+)
+from repro.core.precision import PrecisionPolicy
+
+POLICIES = {
+    "full": PrecisionPolicy.full(),
+    "mixed": PrecisionPolicy.tpu(2),
+    "three_tier": PrecisionPolicy.three_tier(1, 3),
+}
+VARIANTS = ("tile", "panel", "dst")
+PS = (1, 4, 8)
+
+
+def _dst_block_sizes(p, diag_thick):
+    bs, out, start = min(diag_thick, p), [], 0
+    while start < p:
+        out.append(min(bs, p - start))
+        start += bs
+    return out
+
+
+# ---- the conformance matrix ----------------------------------------------
+
+@pytest.mark.parametrize("p", PS)
+@pytest.mark.parametrize("label", sorted(POLICIES))
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_matrix_cell_hazard_free(variant, label, p):
+    rep = analyze(variant, p, POLICIES[label], label=label)
+    assert rep.n_tasks >= 1
+    fr = rep.tier_fractions()
+    assert abs(sum(fr.values()) - 1.0) < 1e-12
+    assert rep.critical_path_flops <= rep.total_flops + 1e-12
+    assert rep.critical_path_tasks <= rep.n_tasks
+
+
+@pytest.mark.parametrize("p", PS)
+@pytest.mark.parametrize("label", sorted(POLICIES))
+@pytest.mark.parametrize("variant", ("tile", "panel"))
+def test_contiguous_variants_hit_closed_form_totals(variant, label, p):
+    # every (i, j, k) update triple is emitted exactly once regardless of
+    # tier routing: POTRF p/3 + TRSM p(p-1)/2 + SYRK p(p-1)/2
+    # + GEMM p(p-1)(p-2)/3 = p^3/3 nb^3 units, and the longest dependency
+    # chain is POTRF -> TRSM -> SYRK repeated down the diagonal: 3p - 2
+    rep = analyze(variant, p, POLICIES[label], label=label)
+    assert rep.total_flops == pytest.approx(p**3 / 3)
+    assert rep.critical_path_tasks == 3 * p - 2
+
+
+@pytest.mark.parametrize("p", PS)
+@pytest.mark.parametrize("label", sorted(POLICIES))
+def test_dst_totals_are_per_block_dense_cholesky(label, p):
+    pol = POLICIES[label]
+    rep = analyze("dst", p, pol, label=label)
+    blocks = _dst_block_sizes(p, pol.diag_thick)
+    assert rep.total_flops == pytest.approx(sum(b**3 / 3 for b in blocks))
+    # blocks are independent: critical path is the largest block's chain
+    assert rep.critical_path_tasks == 3 * max(blocks) - 2
+    assert rep.tier_flops.get(LO, 0.0) == 0.0  # DST math is all hi
+
+
+def test_full_policy_emits_no_conversions():
+    for variant in VARIANTS:
+        rep = analyze(variant, 8, POLICIES["full"])
+        assert rep.n_converts == 0
+        assert rep.tier_fractions() == {HI: 1.0}
+
+
+def test_mixed_policy_conversion_traffic_matches_paper_ops():
+    # tile engine under hi/lo: dlag2s demotes (hi->lo), sconv2d promotes
+    # (lo->hi); both directions must appear, and only those two tiers
+    rep = analyze("tile", 8, POLICIES["mixed"])
+    assert rep.n_converts > 0
+    assert f"{HI}->{LO}" in rep.convert_tiles
+    assert f"{LO}->{HI}" in rep.convert_tiles
+    assert set(rep.tier_flops) == {HI, LO}
+
+
+def test_three_tier_promotes_lo2_through_lo():
+    rep = analyze("tile", 8, POLICIES["three_tier"])
+    assert f"{LO2}->{LO}" in rep.convert_tiles   # far TRSM/GEMM operands
+    assert rep.tier_flops.get(LO2, 0.0) == 0.0   # fp8 is storage-only
+
+
+def test_hi_fraction_grows_with_band_width():
+    fracs = [analyze("tile", 8, PrecisionPolicy.tpu(t)).tier_fractions()[HI]
+             for t in (1, 2, 4, 8)]
+    assert fracs == sorted(fracs)
+    assert fracs[-1] == pytest.approx(1.0)       # band covers everything
+
+
+# ---- storage-tier map -----------------------------------------------------
+
+def test_storage_tier_dst_blocks():
+    pol = PrecisionPolicy.tpu(2)
+    assert storage_tier(pol, 1, 0, variant="dst") == HI     # same 2-block
+    assert storage_tier(pol, 2, 1, variant="dst") is None   # crosses blocks
+
+
+def test_storage_tier_panel_is_two_level_even_for_three_tier():
+    pol = POLICIES["three_tier"]
+    assert storage_tier(pol, 7, 0, variant="tile") == LO2
+    assert storage_tier(pol, 7, 0, variant="panel") == LO   # split storage
+
+
+# ---- checker power: corrupted streams must be rejected --------------------
+
+def _tile_mixed(p=4):
+    return build_dag("tile", p, POLICIES["mixed"]), POLICIES["mixed"]
+
+
+def _idx(tasks, kind, **attrs):
+    for i, t in enumerate(tasks):
+        if t.kind == kind and all(getattr(t, k) == v for k, v in attrs.items()):
+            return i
+    raise AssertionError(f"no {kind} {attrs} in stream")
+
+
+def _expect_hazard(tasks, policy, match, p=4, variant="tile"):
+    with pytest.raises(HazardError, match=match):
+        check_dag(tasks, p, policy, variant)
+
+
+def test_trsm_before_potrf_is_raw_hazard():
+    tasks, pol = _tile_mixed()
+    i = _idx(tasks, "TRSM")
+    tasks[0], tasks[i] = tasks[i], tasks[0]     # factor panel before POTRF
+    _expect_hazard(tasks, pol, "TRSM before POTRF")
+
+
+def test_duplicate_update_is_waw_hazard():
+    tasks, pol = _tile_mixed()
+    i = _idx(tasks, "GEMM")
+    tasks.insert(i + 1, tasks[i])
+    _expect_hazard(tasks, pol, "WAW: duplicate/out-of-order")
+
+
+def test_dropped_promote_is_precision_hazard():
+    # remove the sconv2d (lo -> hi) before the trailing hi update: the SYRK
+    # then consumes a lo-stored panel tile in hi with no current copy
+    tasks, pol = _tile_mixed()
+    del tasks[_idx(tasks, "CONVERT", tier=HI, src_tier=LO)]
+    _expect_hazard(tasks, pol, "missing dlag2s/sconv2d")
+
+
+def test_dropped_demote_is_precision_hazard():
+    # remove the dlag2s (hi -> lo) of the factored diagonal: the lo TRSM
+    # then consumes the hi-stored diagonal tile directly
+    tasks, pol = _tile_mixed()
+    del tasks[_idx(tasks, "CONVERT", tier=LO, src_tier=HI)]
+    _expect_hazard(tasks, pol, "without a current CONVERT")
+
+
+def test_skipped_update_is_raw_hazard():
+    tasks, pol = _tile_mixed()
+    del tasks[_idx(tasks, "SYRK")]              # drop (1,1)'s k=0 update
+    _expect_hazard(tasks, pol, "factor before update")
+
+
+def test_write_after_factor_is_war_hazard():
+    tasks, pol = _tile_mixed()
+    tasks.append(Task("GEMM", 0, (3, 2), reads=((3, 0), (2, 0), (3, 2)),
+                      tier=LO))
+    _expect_hazard(tasks, pol, "WAR: update of already-factored")
+
+
+def test_duplicate_factor_is_waw_hazard():
+    tasks, pol = _tile_mixed()
+    i = _idx(tasks, "POTRF")
+    tasks.append(tasks[i])
+    _expect_hazard(tasks, pol, "factored twice")
+
+
+def test_noop_convert_rejected():
+    tasks, pol = _tile_mixed()
+    tasks.insert(1, Task("CONVERT", 0, (0, 0), tier=HI, src_tier=HI))
+    _expect_hazard(tasks, pol, "no-op conversion")
+
+
+def test_stale_copy_does_not_satisfy_precision_edge():
+    # a write bumps the version and invalidates copies: re-using a convert
+    # from before an update must fail even though the copy once existed
+    pol = PrecisionPolicy.tpu(1)                # every off-diagonal tile lo
+    tasks = build_dag("tile", 2, pol)
+    # stream: POTRF(0,0) CONVERT(0,0)hi->lo TRSM(1,0)lo CONVERT(1,0)lo->hi
+    #         SYRK(1,1) POTRF(1,1); move the promote before the TRSM write
+    i_cv = _idx(tasks, "CONVERT", tier=HI, src_tier=LO)
+    i_tr = _idx(tasks, "TRSM")
+    assert i_tr < i_cv
+    tasks.insert(i_tr, tasks.pop(i_cv))
+    _expect_hazard(tasks, pol, "without a current CONVERT", p=2)
+
+
+def test_missing_factor_is_completeness_hazard():
+    # the trailing POTRF has no downstream reader, so only the end-of-stream
+    # completeness sweep can notice it is gone
+    tasks, pol = _tile_mixed()
+    del tasks[_idx(tasks, "POTRF", target=(3, 3))]
+    _expect_hazard(tasks, pol, "never factored")
+
+
+def test_touching_dropped_tile_rejected():
+    pol = POLICIES["mixed"]
+    tasks = build_dag("dst", 4, pol)
+    tasks.append(Task("GEMM", 0, (3, 0), reads=((3, 0),), tier=HI))
+    _expect_hazard(tasks, pol, "dropped/out-of-range", variant="dst")
+
+
+def test_dst_dag_refused_for_non_dst_generators():
+    with pytest.raises(ValueError, match="dst_dag"):
+        build_dag("tile", 4, PrecisionPolicy.dst(2))
+
+
+# ---- flop_report: the costmodel/benchmarks entry point --------------------
+
+def test_flop_report_units_and_fractions():
+    rep = flop_report(512, 64, POLICIES["mixed"], "tile")   # p = 8
+    assert rep["total_flops"] == pytest.approx((8**3 / 3) * 64**3)
+    assert rep["hi_flops"] + rep["lo_flops"] + rep["lo2_flops"] \
+        == pytest.approx(rep["total_flops"])
+    assert 0.0 < rep["hi_frac"] < 1.0
+    assert rep["lo2_frac"] == 0.0
+    assert rep["critical_path_tasks"] == 22                 # 3p - 2
+    assert rep["convert_tiles"] > 0
+
+
+def test_flop_report_full_policy_is_all_hi():
+    rep = flop_report(256, 64, POLICIES["full"], "panel")
+    assert rep["hi_frac"] == pytest.approx(1.0)
+    assert rep["lo_flops"] == 0.0 and rep["convert_tiles"] == 0.0
+
+
+def test_flop_report_requires_tile_multiple():
+    with pytest.raises(AssertionError):
+        flop_report(100, 64, POLICIES["mixed"])

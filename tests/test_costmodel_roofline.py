@@ -6,8 +6,9 @@ import numpy as np
 import pytest
 
 from repro.configs.shapes import ShapeSpec
+from repro.core.precision import PrecisionPolicy
 from repro.launch.costmodel import (_forward_flops, geostat_cell_cost,
-                                    lm_cell_cost)
+                                    geostat_dag_cost, lm_cell_cost)
 from repro.launch.roofline import collective_bytes_from_hlo
 from repro.models.config import ArchConfig, MoESpec
 from repro.models.transformer import forward_lm, init_lm
@@ -84,6 +85,23 @@ def test_geostat_cost_band_fraction():
     c_al = geostat_cell_cost(65536, 2048, diag_thick=4, chips=256,
                              off_update="aligned")
     assert c_al.flops < c_mp.flops
+
+
+def test_geostat_dag_cost_exact_counts():
+    # the DAG-fed sibling of geostat_cell_cost: raw task totals are exactly
+    # p^3/3 * nb^3, and widening the fp32 band raises the weighted cost
+    c2 = geostat_dag_cost(4096, 512, PrecisionPolicy.tpu(2), chips=16)
+    c4 = geostat_dag_cost(4096, 512, PrecisionPolicy.tpu(4), chips=16)
+    p, nb = 8, 512
+    assert c2.detail["total_flops"] == pytest.approx((p**3 / 3) * nb**3)
+    assert c2.model_flops == pytest.approx(4096**3 / 3)
+    assert c4.flops > c2.flops                # more x6-weighted hi tiles
+    assert c4.detail["hi_frac"] > c2.detail["hi_frac"]
+    assert c2.detail["critical_path_tasks"] == 3 * p - 2
+    # full policy degenerates to all-hi, conversion-free
+    c_full = geostat_dag_cost(4096, 512, PrecisionPolicy.full(), chips=16)
+    assert c_full.detail["hi_frac"] == pytest.approx(1.0)
+    assert c_full.detail["convert_tiles"] == 0
 
 
 def test_collective_parser_on_real_hlo():

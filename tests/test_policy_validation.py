@@ -60,6 +60,44 @@ def test_valid_constructors_still_work():
     assert PrecisionPolicy.dst(2).mode == "dst"
 
 
+# ---- dtype-field validation (solve_dtype / accum_dtype) -------------------
+
+@pytest.mark.parametrize("field", ["solve_dtype", "accum_dtype"])
+@pytest.mark.parametrize("bad", [jnp.int32, jnp.int8, bool, "int16"])
+def test_non_floating_exec_dtypes_rejected(field, bad):
+    with pytest.raises(ValueError, match=field):
+        PrecisionPolicy(mode="mixed", hi=jnp.float32, lo=jnp.bfloat16,
+                        diag_thick=2, **{field: bad})
+
+
+@pytest.mark.parametrize("field", ["solve_dtype", "accum_dtype"])
+def test_garbage_exec_dtype_rejected(field):
+    with pytest.raises(ValueError, match="dtype"):
+        PrecisionPolicy(mode="mixed", hi=jnp.float32, lo=jnp.bfloat16,
+                        diag_thick=2, **{field: object()})
+
+
+def test_accum_narrower_than_lo_rejected():
+    # a bf16 accumulator under fp32 lo storage would round every MXU
+    # partial product below the SP error model the paper assumes
+    with pytest.raises(ValueError, match="accum_dtype"):
+        PrecisionPolicy(mode="mixed", hi=jnp.float32, lo=jnp.float32,
+                        diag_thick=2, accum_dtype=jnp.bfloat16)
+
+
+def test_accum_equal_width_to_lo_allowed():
+    pol = PrecisionPolicy(mode="mixed", hi=jnp.float32, lo=jnp.bfloat16,
+                          diag_thick=2, accum_dtype=jnp.float16)
+    assert jnp.dtype(pol.accum_dtype) == jnp.dtype(jnp.float16)
+
+
+def test_string_float_dtypes_accepted():
+    pol = PrecisionPolicy(mode="mixed", hi=jnp.float32, lo=jnp.bfloat16,
+                          diag_thick=2, solve_dtype="float32",
+                          accum_dtype="float32")
+    assert jnp.issubdtype(jnp.dtype(pol.solve_dtype), jnp.floating)
+
+
 # ---- band >= p degenerates to the full path, bitwise ----------------------
 
 @pytest.fixture(scope="module")
