@@ -1,49 +1,76 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
-"""Benchmark driver: one module per paper figure/table + framework extras.
+"""Benchmark driver.
 
-  fig4   shared-memory time per likelihood iteration (fp64 vs fp64/fp32)
-  fig5   data-movement / storage bytes, DP vs mixed precision
-  fig6   distributed scalability 64 -> 512 chips (roofline model)
-  fig7   Monte-Carlo parameter-estimation accuracy
-  fig8   k-fold PMSE per precision variant
-  table1 wind-speed (WRF-like) regions: estimation + PMSE
-  batch  batched likelihood engine throughput vs sequential path
-  lm     40-cell (arch x shape) roofline table
-  kernels Pallas kernel correctness/footprint summary
-  accuracy oracle-measured accuracy columns next to perf (repro.verify)
+One suite per paper figure/table plus framework extras.  The suite table
+lives in SUITES below -- the one source of truth; `--list` (and the
+header this module prints on bad input) is generated from it, so the help
+text can no longer drift from the registry the way the old hand-written
+docstring enumeration did.
 
 Run a subset: python -m benchmarks.run fig4 fig7
+List suites:  python -m benchmarks.run --list
 """
 
 import sys
 import traceback
 
+# name -> (module under benchmarks/, one-line description)
+SUITES = {
+    "fig4": ("bench_fig4_shared_memory",
+             "shared-memory time per likelihood iteration (fp64 vs fp64/fp32)"),
+    "fig5": ("bench_fig5_data_movement",
+             "data-movement / storage bytes, DP vs mixed precision"),
+    "fig6": ("bench_fig6_scalability",
+             "distributed scalability 64 -> 512 chips (roofline model)"),
+    "fig7": ("bench_fig7_estimation",
+             "Monte-Carlo parameter-estimation accuracy"),
+    "fig8": ("bench_fig8_pmse",
+             "k-fold PMSE per precision variant"),
+    "table1": ("bench_table1_real",
+               "wind-speed (WRF-like) regions: estimation + PMSE"),
+    "batch": ("bench_batched_mle",
+              "batched likelihood engine throughput vs sequential path"),
+    "lm": ("bench_lm_roofline",
+           "40-cell (arch x shape) roofline table"),
+    "kernels": ("bench_kernels",
+                "Pallas kernel correctness/footprint summary"),
+    "accuracy": ("bench_accuracy",
+                 "oracle-measured accuracy columns next to perf (repro.verify)"),
+    "sched": ("bench_sched",
+              "dynamic-runtime makespan/utilization across priorities x workers"),
+}
+
+
+def suite_table() -> str:
+    width = max(len(name) for name in SUITES)
+    lines = [f"  {name:<{width}}  {desc}" for name, (_, desc) in SUITES.items()]
+    return "Suites:\n" + "\n".join(lines)
+
+
+def _resolve(name: str):
+    import importlib
+    module, _ = SUITES[name]
+    return importlib.import_module(f".{module}", package=__package__).run
+
 
 def main() -> None:
-    from . import (bench_accuracy, bench_batched_mle,
-                   bench_fig4_shared_memory, bench_fig5_data_movement,
-                   bench_fig6_scalability, bench_fig7_estimation,
-                   bench_fig8_pmse, bench_kernels, bench_lm_roofline,
-                   bench_table1_real)
-
-    suites = {
-        "fig4": bench_fig4_shared_memory.run,
-        "fig5": bench_fig5_data_movement.run,
-        "fig6": bench_fig6_scalability.run,
-        "fig7": bench_fig7_estimation.run,
-        "fig8": bench_fig8_pmse.run,
-        "table1": bench_table1_real.run,
-        "batch": bench_batched_mle.run,
-        "lm": bench_lm_roofline.run,
-        "kernels": bench_kernels.run,
-        "accuracy": bench_accuracy.run,
-    }
-    wanted = sys.argv[1:] or list(suites)
+    args = sys.argv[1:]
+    if any(a in ("--list", "-h", "--help") for a in args):
+        print(__doc__.strip())
+        print()
+        print(suite_table())
+        return
+    unknown = [a for a in args if a not in SUITES]
+    if unknown:
+        print(f"unknown suite(s): {unknown}", file=sys.stderr)
+        print(suite_table(), file=sys.stderr)
+        sys.exit(2)
+    wanted = args or list(SUITES)
     print("name,us_per_call,derived")
     failures = []
     for name in wanted:
         try:
-            suites[name]()
+            _resolve(name)()
         except Exception:
             failures.append(name)
             traceback.print_exc()

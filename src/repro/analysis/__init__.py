@@ -16,8 +16,11 @@ from .dag import (  # noqa: F401
     check_dag,
     dst_dag,
     flop_report,
+    generations,
     panel_dag,
     storage_tier,
+    successor_map,
+    task_dependencies,
     tile_dag,
 )
 from .lint import Finding, lint_source, lint_tree  # noqa: F401

@@ -20,7 +20,7 @@ import sys
 from pathlib import Path
 
 from .baseline import BASELINE_PATH, load_baseline, split_baselined, update_baseline
-from .dag import HazardError, analyze
+from .dag import HazardError, analyze, check_dag
 from .lint import lint_tree
 
 SRC_ROOT = Path(__file__).resolve().parents[1]   # .../src/repro
@@ -98,6 +98,41 @@ def run_dag(*, verbose: bool = False, as_json: bool = False) -> int:
     return 1 if failures else 0
 
 
+def run_sched_replay() -> int:
+    """Replay dynamic-scheduler dispatch orders through the hazard checker.
+
+    For every matrix cell and every ready-queue priority, run the
+    simulated scheduler (pure Python, no numerics) and feed the actual
+    dispatch order -- a dependency-respecting permutation of the emission
+    order -- back through `check_dag`'s protocol state machine.  An
+    out-of-order execution the runtime would perform must itself be
+    hazard-free and precision-consistent, worker count notwithstanding.
+    """
+    from ..sched.config import PRIORITIES, SchedConfig
+    from ..sched.runtime import build_graph, simulate
+
+    checked, failures = 0, 0
+    for variant in DAG_VARIANTS:
+        for label, policy in _dag_policies().items():
+            for p in DAG_PS:
+                graph = build_graph(variant, p, policy)
+                for priority in PRIORITIES:
+                    cfg = SchedConfig(priority=priority, workers=4,
+                                      backend="sim")
+                    rep = simulate(graph, cfg)
+                    reordered = [graph.tasks[i] for i in rep.dispatch_order]
+                    checked += 1
+                    try:
+                        check_dag(reordered, p, policy, variant,
+                                  label=f"{label}/sched:{priority}")
+                    except HazardError as e:
+                        print(f"SCHED REPLAY HAZARD: {e}")
+                        failures += 1
+    print(f"sched-replay: {checked} (variant, policy, p, priority) dispatch "
+          f"orders replayed, {failures} hazard violations")
+    return 1 if failures else 0
+
+
 def main(argv=None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m repro.analysis",
@@ -107,6 +142,9 @@ def main(argv=None) -> int:
                              "(default action)")
     parser.add_argument("--lint-only", action="store_true")
     parser.add_argument("--dag-only", action="store_true")
+    parser.add_argument("--sched-replay-only", action="store_true",
+                        help="only replay scheduler dispatch orders through "
+                             "the hazard checker")
     parser.add_argument("--root", type=Path, default=SRC_ROOT,
                         help="package root to lint (default: src/repro)")
     parser.add_argument("--update-baseline", action="store_true",
@@ -119,10 +157,16 @@ def main(argv=None) -> int:
     args = parser.parse_args(argv)
 
     rc = 0
+    if args.sched_replay_only:
+        rc = run_sched_replay()
+        if rc == 0:
+            print("static analysis: OK")
+        return rc
     if not args.dag_only:
         rc |= run_lint(args.root, update=args.update_baseline)
     if not args.lint_only and not args.update_baseline:
         rc |= run_dag(verbose=args.verbose, as_json=args.json)
+        rc |= run_sched_replay()
     if rc == 0:
         print("static analysis: OK")
     return rc

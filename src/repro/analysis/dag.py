@@ -226,6 +226,86 @@ def build_dag(variant: str, p: int, policy: PrecisionPolicy) -> list[Task]:
 
 
 # ---------------------------------------------------------------------------
+# dependency structure (shared by the checker and repro.sched's runtime)
+# ---------------------------------------------------------------------------
+
+def task_dependencies(tasks: list[Task], p: int, policy: PrecisionPolicy,
+                      variant: str) -> list[tuple[int, ...]]:
+    """Per-task producer indices, aligned with each task's operand list.
+
+    For a compute task, entry m is the index of the task whose output
+    operand ``reads[m]`` consumes: the tile's last writer, or -- when the
+    read crosses storage tiers -- the CONVERT that produced the copy being
+    read.  For a CONVERT task the single entry is the producer of the
+    source value.  ``-1`` marks an initial-storage operand (no producing
+    task).  This is the one dependency computation shared by `check_dag`'s
+    critical-path DP and the dynamic scheduler (`repro.sched`): an edge
+    here IS an edge in the runtime's ready-queue graph.
+
+    Permissive by design: on a corrupted stream a missing producer
+    degrades to the tile's last writer / -1, so `check_dag`'s protocol
+    state machine (not this helper) reports the violation.
+    """
+    tier_of = lambda i, j: storage_tier(policy, i, j, variant=variant)
+    last_writer: dict[tuple[int, int], int] = {}
+    copies: dict[tuple[tuple[int, int], str], int] = {}
+    deps: list[tuple[int, ...]] = []
+    for idx, task in enumerate(tasks):
+        tile = task.target
+        if task.kind == "CONVERT":
+            if task.src_tier == tier_of(*tile):
+                src = last_writer.get(tile, -1)
+            else:            # chained copy: source is itself a conversion
+                src = copies.get((tile, task.src_tier),
+                                 last_writer.get(tile, -1))
+            deps.append((src,))
+            copies[(tile, task.tier)] = idx
+        else:
+            row = []
+            for r in task.reads:
+                if tier_of(*r) in (task.tier, None):
+                    row.append(last_writer.get(r, -1))
+                else:        # cross-tier read goes through the current copy
+                    # (in-place operands too: an lo2-stored tile consumed in
+                    # lo reads its CONVERT product, exactly like the
+                    # engine's astype(lo) of the accumulator)
+                    row.append(copies.get((r, task.tier),
+                                          last_writer.get(r, -1)))
+            deps.append(tuple(row))
+            last_writer[tile] = idx
+            for key in [c for c in copies if c[0] == tile]:
+                del copies[key]  # a write invalidates stale copies
+    return deps
+
+
+def successor_map(deps: list[tuple[int, ...]]) -> list[list[int]]:
+    """Inverse of `task_dependencies`: per-task list of dependent tasks."""
+    succs: list[list[int]] = [[] for _ in deps]
+    for idx, row in enumerate(deps):
+        for d in set(row):
+            if d >= 0:
+                succs[d].append(idx)
+    return succs
+
+
+def generations(deps: list[tuple[int, ...]]) -> list[list[int]]:
+    """Bucket task indices by longest-dependency-chain depth.
+
+    Generation g holds every task whose longest producer chain has g
+    tasks before it -- the maximal wavefronts a dependency-respecting
+    runtime may execute concurrently.  Emission order is topological, so
+    a single forward pass suffices.
+    """
+    depth = [0] * len(deps)
+    for idx, row in enumerate(deps):
+        depth[idx] = max((depth[d] + 1 for d in row if d >= 0), default=0)
+    gens: list[list[int]] = [[] for _ in range(max(depth, default=-1) + 1)]
+    for idx, d in enumerate(depth):
+        gens[d].append(idx)
+    return gens
+
+
+# ---------------------------------------------------------------------------
 # the checker
 # ---------------------------------------------------------------------------
 
@@ -284,7 +364,9 @@ def check_dag(tasks: list[Task], p: int, policy: PrecisionPolicy,
                           f"{why} at task {task}")
 
     # --- replay: protocol state machine + conversion-copy tracking ---------
-    last_writer: dict[tuple[int, int], int] = {}
+    # dependency edges come from the shared helper so the checker's critical
+    # path and the dynamic scheduler (repro.sched) see the same graph
+    deps_list = task_dependencies(tasks, p, policy, variant)
     cp_flops: list[float] = []
     cp_tasks: list[int] = []
     tier_flops: dict[str, float] = {}
@@ -309,11 +391,9 @@ def check_dag(tasks: list[Task], p: int, policy: PrecisionPolicy,
             st.copies[task.tier] = st.version
             key = f"{task.src_tier}->{task.tier}"
             convert_tiles[key] = convert_tiles.get(key, 0) + 1
-            deps = [last_writer.get(tile, -1)]
             flops = 0.0
         else:
             # 1. precision-edge consistency on every read
-            deps = []
             for r in task.reads:
                 if r not in live:
                     fail(task, f"reads dropped tile {r}")
@@ -334,7 +414,6 @@ def check_dag(tasks: list[Task], p: int, policy: PrecisionPolicy,
                 if r[1] == task.k and task.kind == "TRSM" and r == (task.k, task.k):
                     if not rst.factored:
                         fail(task, f"RAW: TRSM before POTRF of {r}")
-                deps.append(last_writer.get(r, -1))
 
             # 3. protocol / WAR / WAW on the written tile
             i, j = tile
@@ -368,10 +447,10 @@ def check_dag(tasks: list[Task], p: int, policy: PrecisionPolicy,
             st.copies.clear()      # a write invalidates every stale copy
             flops = _FLOP_UNITS[task.kind]
             tier_flops[task.tier] = tier_flops.get(task.tier, 0.0) + flops
-            last_writer[tile] = idx
 
         # critical path DP over RAW/WAW edges (emission order = topo order);
         # flops-longest and tasks-longest chains are tracked independently
+        deps = deps_list[idx]
         best_f = max((cp_flops[d] for d in deps if d >= 0), default=0.0)
         best_t = max((cp_tasks[d] for d in deps if d >= 0), default=0)
         cp_flops.append(best_f + flops)

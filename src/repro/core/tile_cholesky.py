@@ -70,16 +70,26 @@ def assemble_lower(tiles, p: int, nb: int, dtype):
     return jnp.where(tri, out, jnp.zeros((), dtype=dtype))
 
 
-def tile_cholesky(a, nb: int, policy: PrecisionPolicy):
+def tile_cholesky(a, nb: int, policy: PrecisionPolicy, *, schedule=None):
     """Factor SPD `a` (..., n, n) -> lower-triangular L in policy.hi dtype.
 
     Faithful Algorithm 1.  For mode="full" every tile is hi (reference DP
     path).  For mode="dst" use dst_cholesky instead.  Leading axes of `a`
     are a batch of independent factorizations (one per candidate theta);
     every tile op below batches over them.
+
+    `schedule` opts into the dynamic task runtime (DESIGN.md §12): pass a
+    `repro.sched.SchedConfig` and the same task DAG executes out of order
+    on a threaded worker pool, bitwise-identical to the sequential loop
+    nest below.  Eager-only (the runtime is host-side Python) -- leave it
+    None inside jit/vmap.
     """
     if policy.mode == "dst":
         raise ValueError("use dst_cholesky for the DST baseline")
+    if schedule is not None:
+        from ..sched.runtime import scheduled_tile_cholesky
+        l, _report = scheduled_tile_cholesky(a, nb, policy, schedule)
+        return l
     hi, lo = policy.hi, policy.lo
     tiles, p = split_tiles(a, nb)
 

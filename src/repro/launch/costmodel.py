@@ -280,7 +280,31 @@ def geostat_cell_cost(n: int, nb: int, diag_thick: int, *, chips: int,
 
 
 # MXU throughput weights relative to bf16 on v5e: fp32 ~6x, fp8 ~0.5x.
-_TIER_WEIGHT = {"hi": 6.0, "lo": 1.0, "lo2": 0.5}
+TIER_WEIGHT = {"hi": 6.0, "lo": 1.0, "lo2": 0.5}
+_TIER_WEIGHT = TIER_WEIGHT  # back-compat alias
+
+# Default virtual duration of a CONVERT (dlag2s/sconv2d) in the same
+# bf16-equivalent nb^3 units as the compute weights below: an nb x nb tile
+# moves ~nb^2 (BF16 + F32) bytes against ~nb^3-scale math, so at the nb the
+# suites use (16-64) conversion lands well under one lo SYRK -- a quarter
+# unit keeps it visible on the critical path without dominating it.
+CONVERT_COST_UNITS = 0.25
+
+
+def task_virtual_cost(task, *, convert_cost: float = CONVERT_COST_UNITS) -> float:
+    """Virtual duration of one `repro.analysis.dag.Task` for the simulated
+    scheduler backend, in bf16-equivalent nb^3 units.
+
+    Compute tasks cost their tile-op FLOP units (POTRF 1/3, TRSM/SYRK 1,
+    GEMM 2) scaled by the per-tier MXU throughput weight; CONVERTs cost a
+    flat data-movement term.  This is the same per-tier weighting
+    `geostat_dag_cost` applies to whole-DAG totals, applied per task.
+    """
+    from ..analysis.dag import _FLOP_UNITS
+
+    if task.kind == "CONVERT":
+        return float(convert_cost)
+    return _FLOP_UNITS[task.kind] * TIER_WEIGHT[task.tier]
 
 
 def geostat_dag_cost(n: int, nb: int, policy, *, chips: int,

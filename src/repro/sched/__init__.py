@@ -1,0 +1,35 @@
+"""Dynamic tile-task runtime: out-of-order Cholesky scheduling (DESIGN.md §12).
+
+The StarPU layer of the reproduction: consumes the symbolic task DAGs
+`repro.analysis.dag` extracts from the tile/panel/DST engines and executes
+them with a dependency-counting ready-queue scheduler -- a simulated
+virtual-time backend for makespan/utilization studies and a real threaded
+backend whose per-tile kernels are bitwise-identical to the sequential
+engines.  `python -m repro.sched` schedules one cell and writes a Chrome
+trace; `core.tile_cholesky(..., schedule=SchedConfig(...))` is the opt-in
+engine hook.
+"""
+
+from .config import BACKENDS, PRIORITIES, SchedConfig  # noqa: F401
+from .runtime import (  # noqa: F401
+    SchedReport,
+    TaskEvent,
+    TaskGraph,
+    build_graph,
+    downstream_cost,
+    execute,
+    priority_keys,
+    scheduled_cholesky,
+    scheduled_tile_cholesky,
+    simulate,
+    simulate_dag,
+)
+from .kernels import KernelSet, make_kernels, tier_dtype  # noqa: F401
+from .trace import (  # noqa: F401
+    chrome_trace,
+    format_summary,
+    load_and_validate,
+    summary_rows,
+    validate_trace,
+    write_trace,
+)

@@ -1,0 +1,151 @@
+"""Per-tile kernels for the real executor -- engine math, task-sized.
+
+Each `KernelSet` maps one symbolic task (`repro.analysis.dag.Task`) plus
+its operand arrays to one output array, using exactly the arithmetic the
+corresponding sequential engine performs on that tile:
+
+  tile  -- `core/tile_cholesky.py` line for line: `_potrf`,
+           `_trsm_right_lt`, hi SYRK/GEMM via plain matmul, lo GEMM via
+           `lo_matmul`, CONVERTs via `astype` on policy dtypes;
+  panel -- `core/panel_cholesky.py` per tile: batch-of-1
+           `_batched_trsm_right_lt` (the batched triangular-solve path
+           rounds differently from the unbatched one, and a slice of a
+           batch is bitwise a batch of one -- pinned in the equivalence
+           tests), per-slice einsum updates, per-tile `lo_matmul` blocks
+           of the big off-band GEMM;
+  dst   -- the tile-level dense right-looking hi path per super-block.
+
+Because every kernel consumes the same operand values and applies the
+same op in the same order per tile, a dependency-respecting execution of
+the task stream reproduces the engine's tile values bitwise -- that is
+the property `tests/test_sched_equivalence.py` gates on the full
+(variant x policy x p) matrix.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..analysis.dag import HI, LO, LO2, Task, storage_tier
+from ..core.precision import PrecisionPolicy, lo_matmul
+from ..core.tile_cholesky import _potrf, _trsm_right_lt, split_tiles
+from ..core.panel_cholesky import _batched_trsm_right_lt
+
+
+def tier_dtype(policy: PrecisionPolicy, sym: str):
+    """Map a symbolic tier (hi/lo/lo2) to the policy's storage dtype."""
+    return {HI: policy.hi, LO: policy.lo, LO2: policy.lo2}[sym]
+
+
+class KernelSet:
+    """Initial tile storage + one-task execution for one engine variant."""
+
+    variant: str
+
+    def __init__(self, a, nb: int, policy: PrecisionPolicy):
+        self.policy = policy
+        self.nb = nb
+        tiles, self.p = split_tiles(a, nb)
+        self._store = {}
+        for (i, j), t in tiles.items():
+            sym = storage_tier(policy, i, j, variant=self.variant)
+            if sym is None:          # dropped (DST off-block) tile
+                continue
+            self._store[(i, j)] = t.astype(tier_dtype(policy, sym))
+
+    def initial_store(self) -> dict:
+        return self._store
+
+    def initial(self, tile: tuple[int, int]):
+        return self._store[tile]
+
+    def _out_dtype(self, task: Task):
+        return tier_dtype(self.policy,
+                          storage_tier(self.policy, *task.target,
+                                       variant=self.variant))
+
+    def run(self, task: Task, ops: list):
+        raise NotImplementedError
+
+
+class TileKernels(KernelSet):
+    """`tile_cholesky`'s Algorithm 1 tile ops (see module docstring)."""
+
+    variant = "tile"
+
+    def run(self, task: Task, ops: list):
+        pol = self.policy
+        hi, lo = pol.hi, pol.lo
+        if task.kind == "POTRF":
+            return _potrf(ops[0], hi)                     # line 8 dpotrf
+        if task.kind == "CONVERT":                        # dlag2s / sconv2d
+            return ops[0].astype(tier_dtype(pol, task.tier))
+        if task.kind == "TRSM":
+            l_kk, a_ik = ops
+            if task.tier == HI:                           # line 12 dtrsm
+                return _trsm_right_lt(l_kk, a_ik, hi, hi)
+            return _trsm_right_lt(l_kk, a_ik,             # line 14 strsm
+                                  pol.solve_dtype, self._out_dtype(task))
+        if task.kind == "SYRK":                           # line 19 dsyrk
+            c, acc = ops
+            return acc - c @ jnp.swapaxes(c, -1, -2)
+        a_ik, a_jk, acc = ops                             # GEMM
+        if task.tier == HI:                               # line 25 dgemm
+            return acc - a_ik @ jnp.swapaxes(a_jk, -1, -2)
+        upd = lo_matmul(a_ik, jnp.swapaxes(a_jk, -1, -2), pol, tier=lo)
+        return (acc - upd).astype(self._out_dtype(task))  # line 27 sgemm
+
+
+class PanelKernels(KernelSet):
+    """`panel_cholesky_banded`'s per-step ops, sliced to single tiles."""
+
+    variant = "panel"
+
+    def run(self, task: Task, ops: list):
+        pol = self.policy
+        hi = pol.hi
+        lo = pol.lo if pol.mode != "full" else pol.hi   # single-tier off
+        if task.kind == "POTRF":
+            return jnp.linalg.cholesky(ops[0])
+        if task.kind == "CONVERT":
+            dst = hi if task.tier == HI else lo
+            return ops[0].astype(dst)
+        if task.kind == "TRSM":
+            l_kk, a_ik = ops
+            if task.tier == HI:                           # dtrsm on the band
+                return _batched_trsm_right_lt(l_kk, a_ik[None], hi, hi)[0]
+            return _batched_trsm_right_lt(                # batched strsm
+                l_kk, a_ik[None], pol.solve_dtype, lo)[0]
+        if task.kind in ("SYRK", "GEMM") and task.tier == HI:
+            lhs, rhs, acc = ops                           # dsyrk / dgemm
+            upd = jnp.einsum("ab,cb->ac", lhs, rhs, preferred_element_type=hi)
+            return acc - upd.astype(hi)
+        lhs, rhs, acc = ops                               # off-band sgemm
+        upd = lo_matmul(lhs, jnp.swapaxes(rhs, -1, -2), pol)
+        return acc - upd.astype(lo)
+
+
+class DstKernels(KernelSet):
+    """Dense right-looking hi tile ops inside each DST super-block."""
+
+    variant = "dst"
+
+    def run(self, task: Task, ops: list):
+        hi = self.policy.hi
+        if task.kind == "POTRF":
+            return _potrf(ops[0], hi)
+        if task.kind == "TRSM":
+            l_kk, a_ik = ops
+            return _trsm_right_lt(l_kk, a_ik, hi, hi)
+        if task.kind == "SYRK":
+            c, acc = ops
+            return acc - c @ jnp.swapaxes(c, -1, -2)
+        a_ik, a_jk, acc = ops
+        return acc - a_ik @ jnp.swapaxes(a_jk, -1, -2)
+
+
+_KERNELS = {"tile": TileKernels, "panel": PanelKernels, "dst": DstKernels}
+
+
+def make_kernels(variant: str, a, nb: int, policy: PrecisionPolicy) -> KernelSet:
+    return _KERNELS[variant](a, nb, policy)

@@ -1,0 +1,381 @@
+"""StarPU-style dynamic tile-task runtime (DESIGN.md §12).
+
+The static layer (`repro.analysis.dag`) already extracts each engine's
+POTRF/TRSM/SYRK/GEMM/CONVERT task stream and proves it hazard-free; this
+module is the runtime that *executes* that stream out of order, the way
+StarPU executes ExaGeoStat's tile Cholesky (paper §4): a dependency-
+counting ready queue, a pluggable priority policy, and two executor
+backends behind one interface --
+
+  * `simulate`  -- virtual-time list scheduling: every task advances a
+    deterministic clock by its `launch.costmodel.task_virtual_cost`
+    duration (per-tier MXU FLOP weights + a conversion/data-movement
+    term).  Reports makespan, per-worker utilization, and overlap for W
+    workers without touching a single float of numerics.
+
+  * `execute`   -- a real threaded executor: W OS threads pop ready tile
+    tasks and run per-tile NumPy/JAX kernels (`sched.kernels`, the same
+    `_potrf`/`_trsm_right_lt`/SYRK-update math as `core/tile_cholesky`).
+    Results are bitwise-identical to the sequential engines: every task
+    output is an immutable value keyed by producer index, so any
+    dependency-respecting pop order computes exactly the same bits.
+
+Both backends record per-task begin/end/tier/worker events (`TaskEvent`)
+consumed by `sched.trace` for Chrome `trace_event` JSON and summary
+tables, and both log their dispatch order, which CI replays through
+`check_dag` -- the executed order must itself be hazard-free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import threading
+import time
+
+from ..analysis.dag import (
+    Task,
+    build_dag,
+    successor_map,
+    task_dependencies,
+)
+from ..launch.costmodel import task_virtual_cost
+from .config import SchedConfig
+
+_KIND_RANK = {"POTRF": 0, "CONVERT": 1, "TRSM": 2, "SYRK": 3, "GEMM": 4}
+
+
+# ---------------------------------------------------------------------------
+# task graph
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TaskGraph:
+    """A task stream plus its dependency structure, ready to schedule."""
+    variant: str
+    p: int
+    policy: object                     # PrecisionPolicy
+    tasks: tuple[Task, ...]
+    deps: tuple[tuple[int, ...], ...]  # per-task producer indices
+    succs: tuple[tuple[int, ...], ...]
+
+    @property
+    def n(self) -> int:
+        return len(self.tasks)
+
+    def indegree(self) -> list[int]:
+        return [len({d for d in row if d >= 0}) for row in self.deps]
+
+
+def build_graph(variant: str, p: int, policy) -> TaskGraph:
+    tasks = build_dag(variant, p, policy)
+    deps = task_dependencies(tasks, p, policy, variant)
+    succs = successor_map(deps)
+    return TaskGraph(variant=variant, p=p, policy=policy,
+                     tasks=tuple(tasks),
+                     deps=tuple(tuple(d) for d in deps),
+                     succs=tuple(tuple(s) for s in succs))
+
+
+def downstream_cost(graph: TaskGraph, config: SchedConfig) -> list[float]:
+    """Per-task critical-path-to-exit length under the virtual cost model.
+
+    The same longest-chain computation `DagReport` runs forward over
+    producers, run backward over consumers: a task's priority is its own
+    cost plus the heaviest chain hanging off it.
+    """
+    costs = [task_virtual_cost(t, convert_cost=config.convert_cost)
+             for t in graph.tasks]
+    down = [0.0] * graph.n
+    for idx in range(graph.n - 1, -1, -1):   # emission order is topological
+        down[idx] = costs[idx] + max((down[s] for s in graph.succs[idx]),
+                                     default=0.0)
+    return down
+
+
+def priority_keys(graph: TaskGraph, config: SchedConfig) -> list[tuple]:
+    """Total-order ready-queue key per task (smaller pops first)."""
+    if config.priority == "fifo":
+        return [(idx,) for idx in range(graph.n)]
+    if config.priority == "panel_first":
+        # right-looking lookahead: later panels outrank earlier trailing
+        # updates, and within a step the factor ops outrank the updates
+        return [(t.k, _KIND_RANK[t.kind], idx)
+                for idx, t in enumerate(graph.tasks)]
+    down = downstream_cost(graph, config)
+    return [(-down[idx], idx) for idx in range(graph.n)]
+
+
+# ---------------------------------------------------------------------------
+# reports
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TaskEvent:
+    """One executed task: who ran it, when, and what it was."""
+    index: int
+    name: str
+    kind: str
+    tier: str
+    k: int
+    worker: int
+    start: float       # sim: virtual units; real: microseconds since t0
+    end: float
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedReport:
+    backend: str
+    variant: str
+    priority: str
+    workers: int
+    n_tasks: int
+    makespan: float
+    worker_busy: tuple[float, ...]
+    dispatch_order: tuple[int, ...]
+    events: tuple[TaskEvent, ...]
+
+    @property
+    def utilization(self) -> float:
+        denom = self.workers * self.makespan
+        return sum(self.worker_busy) / denom if denom > 0 else 1.0
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Fraction of the makespan during which >= 2 workers are busy."""
+        if self.makespan <= 0:
+            return 0.0
+        bounds = []
+        for ev in self.events:
+            bounds.append((ev.start, 1))
+            bounds.append((ev.end, -1))
+        bounds.sort()
+        busy, last_t, overlapped = 0, 0.0, 0.0
+        for t, delta in bounds:
+            if busy >= 2:
+                overlapped += t - last_t
+            busy += delta
+            last_t = t
+        return overlapped / self.makespan
+
+
+# ---------------------------------------------------------------------------
+# simulated backend: deterministic virtual-time list scheduling
+# ---------------------------------------------------------------------------
+
+def simulate(graph: TaskGraph, config: SchedConfig) -> SchedReport:
+    """Schedule `graph` on W virtual workers; no numerics, no wall clock.
+
+    Deterministic by construction: ties break on (priority key, task
+    index) in the ready heap and (finish time, worker id) in the event
+    heap, and task durations come from the analytic cost model -- the
+    same config always yields the same makespan, bit for bit.
+    """
+    keys = priority_keys(graph, config)
+    costs = [task_virtual_cost(t, convert_cost=config.convert_cost)
+             for t in graph.tasks]
+    ndeps = graph.indegree()
+    ready = [keys[i] for i in range(graph.n) if ndeps[i] == 0]
+    heapq.heapify(ready)
+    idle = list(range(config.workers))
+    heapq.heapify(idle)
+    running: list[tuple[float, int, int]] = []   # (end, worker, task)
+    busy = [0.0] * config.workers
+    dispatch: list[int] = []
+    events: list[TaskEvent] = []
+    t, done = 0.0, 0
+
+    while done < graph.n:
+        while ready and idle:
+            key = heapq.heappop(ready)
+            idx = key[-1] if len(key) > 1 else key[0]
+            w = heapq.heappop(idle)
+            end = t + costs[idx]
+            heapq.heappush(running, (end, w, idx))
+            dispatch.append(idx)
+            task = graph.tasks[idx]
+            events.append(TaskEvent(
+                index=idx, name=str(task), kind=task.kind, tier=task.tier,
+                k=task.k, worker=w, start=t, end=end))
+            busy[w] += costs[idx]
+        if not running:
+            raise RuntimeError("scheduler deadlock: no ready task and no "
+                               "running task (cyclic or truncated DAG)")
+        end, w, idx = heapq.heappop(running)
+        t = end
+        heapq.heappush(idle, w)
+        done += 1
+        for s in graph.succs[idx]:
+            ndeps[s] -= 1
+            if ndeps[s] == 0:
+                heapq.heappush(ready, keys[s])
+
+    return SchedReport(
+        backend="sim", variant=graph.variant, priority=config.priority,
+        workers=config.workers, n_tasks=graph.n, makespan=t,
+        worker_busy=tuple(busy), dispatch_order=tuple(dispatch),
+        events=tuple(events))
+
+
+# ---------------------------------------------------------------------------
+# real backend: threaded out-of-order execution of per-tile kernels
+# ---------------------------------------------------------------------------
+
+class _ExecState:
+    """Shared mutable state behind one lock; values are write-once."""
+
+    def __init__(self, graph: TaskGraph, keys: list[tuple]):
+        self.graph = graph
+        self.keys = keys
+        self.ndeps = graph.indegree()
+        self.ready = [keys[i] for i in range(graph.n) if self.ndeps[i] == 0]
+        heapq.heapify(self.ready)
+        self.values: list = [None] * graph.n
+        self.done = 0
+        self.dispatch: list[int] = []
+        self.events: list[TaskEvent] = []
+        self.error: BaseException | None = None
+        self.lock = threading.Lock()
+        self.cond = threading.Condition(self.lock)
+
+
+def execute(graph: TaskGraph, config: SchedConfig, kernels) -> tuple[dict, SchedReport]:
+    """Run the DAG on `config.workers` OS threads with real tile kernels.
+
+    `kernels` is a `sched.kernels.KernelSet`: it owns the initial tile
+    storage and maps one task + its operand arrays to one output array.
+    Every output is stored write-once under its task index, and every
+    consumer fetches operands by producer index (`graph.deps`), so a late
+    reader can never observe a newer tile version -- out-of-order
+    execution is bitwise-equal to in-order execution by construction.
+
+    Returns (final tile store, report).  The final store maps each tile
+    to its last writer's output (its factored value).
+    """
+    keys = priority_keys(graph, config)
+    state = _ExecState(graph, keys)
+    n = graph.n
+    t0 = time.perf_counter()
+
+    def fetch(idx: int) -> list:
+        task = graph.tasks[idx]
+        reads = task.reads if task.kind != "CONVERT" else (task.target,)
+        ops = []
+        for r, producer in zip(reads, graph.deps[idx]):
+            ops.append(state.values[producer] if producer >= 0
+                       else kernels.initial(r))
+        return ops
+
+    def worker(w: int) -> None:
+        while True:
+            with state.cond:
+                while not state.ready:
+                    if state.done >= n or state.error is not None:
+                        return
+                    state.cond.wait()
+                key = heapq.heappop(state.ready)
+                idx = key[-1] if len(key) > 1 else key[0]
+                state.dispatch.append(idx)
+                ops = fetch(idx)
+            task = graph.tasks[idx]
+            start = time.perf_counter()
+            try:
+                out = kernels.run(task, ops)
+                # materialize before publishing so a consumer never races
+                # an async dispatch
+                out.block_until_ready()
+            except BaseException as e:          # propagate to the caller
+                with state.cond:
+                    if state.error is None:
+                        state.error = e
+                    state.cond.notify_all()
+                return
+            end = time.perf_counter()
+            with state.cond:
+                state.values[idx] = out
+                state.done += 1
+                state.events.append(TaskEvent(
+                    index=idx, name=str(task), kind=task.kind,
+                    tier=task.tier, k=task.k, worker=w,
+                    start=(start - t0) * 1e6, end=(end - t0) * 1e6))
+                for s in graph.succs[idx]:
+                    state.ndeps[s] -= 1
+                    if state.ndeps[s] == 0:
+                        heapq.heappush(state.ready, keys[s])
+                state.cond.notify_all()
+
+    threads = [threading.Thread(target=worker, args=(w,), daemon=True)
+               for w in range(config.workers)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    if state.error is not None:
+        raise state.error
+
+    store = dict(kernels.initial_store())
+    for idx, task in enumerate(graph.tasks):
+        if task.kind != "CONVERT":
+            store[task.target] = state.values[idx]
+
+    makespan = max((ev.end for ev in state.events), default=0.0)
+    busy = [0.0] * config.workers
+    for ev in state.events:
+        busy[ev.worker] += ev.end - ev.start
+    report = SchedReport(
+        backend="real", variant=graph.variant, priority=config.priority,
+        workers=config.workers, n_tasks=n, makespan=makespan,
+        worker_busy=tuple(busy), dispatch_order=tuple(state.dispatch),
+        events=tuple(state.events))
+    return store, report
+
+
+# ---------------------------------------------------------------------------
+# high-level entry points
+# ---------------------------------------------------------------------------
+
+def _maybe_trace(report: SchedReport, config: SchedConfig) -> None:
+    if config.trace_path:
+        from .trace import write_trace
+        write_trace(report, config.trace_path)
+
+
+def simulate_dag(variant: str, p: int, policy,
+                 config: SchedConfig | None = None) -> SchedReport:
+    """Build + schedule one engine's DAG on the virtual backend."""
+    config = config or SchedConfig(backend="sim")
+    report = simulate(build_graph(variant, p, policy), config)
+    _maybe_trace(report, config)
+    return report
+
+
+def scheduled_cholesky(a, nb: int, policy, config: SchedConfig, *,
+                       variant: str = "tile"):
+    """Factor SPD `a` by executing the variant's task DAG out of order.
+
+    Real-backend entry point behind `core.tile_cholesky(..., schedule=)`.
+    Returns (tile store, report); tile values are bitwise-identical to the
+    sequential engine's internal store for the same variant and policy.
+    """
+    from .kernels import make_kernels
+
+    if config.backend != "real":
+        raise ValueError("scheduled_cholesky needs backend='real'; use "
+                         "simulate_dag for the virtual backend")
+    n = a.shape[-1]
+    assert n % nb == 0, f"n={n} must be a multiple of nb={nb}"
+    p = n // nb
+    graph = build_graph(variant, p, policy)
+    kernels = make_kernels(variant, a, nb, policy)
+    store, report = execute(graph, config, kernels)
+    _maybe_trace(report, config)
+    return store, report
+
+
+def scheduled_tile_cholesky(a, nb: int, policy, config: SchedConfig):
+    """Drop-in `tile_cholesky`: same result assembled in hi, via the runtime."""
+    from ..core.tile_cholesky import assemble_lower
+
+    store, report = scheduled_cholesky(a, nb, policy, config, variant="tile")
+    p = a.shape[-1] // nb
+    return assemble_lower(store, p, nb, policy.hi), report

@@ -1,0 +1,189 @@
+"""Real-executor equivalence matrix: out-of-order == sequential, bitwise.
+
+The acceptance gate for the dynamic runtime (DESIGN.md §12): executing an
+engine's task DAG on a threaded worker pool must reproduce the sequential
+engine's tile values *bitwise* -- not allclose -- for every cell of the
+(variant x full/mixed/three_tier x p in {1, 4, 8}) conformance matrix.
+The runtime earns this by construction (write-once values keyed by
+producer index), and these tests pin it empirically.
+
+One deliberate exception: `dst_cholesky` factors each super-block with one
+dense LAPACK Cholesky, while the DAG executes tile-level right-looking
+steps inside the block.  For single-tile blocks the two coincide exactly;
+for multi-tile blocks the blocking differs algorithmically, so the gate
+there is (a) out-of-order bitwise-equal to in-order replay of the same
+DAG, and (b) allclose to the dense-block reference.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import HAVE_HYPOTHESIS, HYPOTHESIS_SKIP_REASON
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings
+    import strategies as sts
+
+from repro.core import PrecisionPolicy, tile_cholesky
+from repro.core.panel_cholesky import panel_cholesky_banded
+from repro.core.tile_cholesky import dst_cholesky, split_tiles
+from repro.sched import SchedConfig, scheduled_cholesky, scheduled_tile_cholesky
+from repro.verify.generators import spd_matrix
+
+NB = 8
+POLICIES = {
+    "full": PrecisionPolicy.full(),
+    "mixed": PrecisionPolicy.tpu(2),
+    "three_tier": PrecisionPolicy.three_tier(1, 3),
+}
+PS = (1, 4, 8)
+OOO = SchedConfig(priority="critical_path", workers=4)     # out of order
+INORDER = SchedConfig(priority="fifo", workers=1)          # == emission order
+
+
+def _same_bits(x, y) -> bool:
+    """Bitwise equality, NaN == NaN (lo tiers can round to NaN identically)."""
+    if x.dtype != y.dtype or x.shape != y.shape:
+        return False
+    return bool(jnp.all((x == y) | (jnp.isnan(x) & jnp.isnan(y))))
+
+
+def _assert_stores_equal(got: dict, want: dict, ctx: str) -> None:
+    assert set(got) == set(want), ctx
+    for tile in sorted(got):
+        assert _same_bits(got[tile], want[tile]), f"{ctx}: tile {tile}"
+
+
+# ---------------------------------------------------------------------------
+# tile variant vs core.tile_cholesky
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", PS)
+@pytest.mark.parametrize("label", sorted(POLICIES))
+def test_tile_scheduled_bitwise(label, p):
+    pol = POLICIES[label]
+    a = spd_matrix(p, p * NB, cond=100.0)
+    l_seq = tile_cholesky(a, NB, pol)                      # eager engine
+    l_ooo, rep = scheduled_tile_cholesky(a, NB, pol, OOO)
+    assert rep.n_tasks > 0 and _same_bits(l_ooo, l_seq), (label, p)
+    # out-of-order == in-order replay of the same DAG, tile by tile
+    s_ooo, _ = scheduled_cholesky(a, NB, pol, OOO, variant="tile")
+    s_ord, _ = scheduled_cholesky(a, NB, pol, INORDER, variant="tile")
+    _assert_stores_equal(s_ooo, s_ord, f"tile/{label}/p={p}")
+
+
+def test_tile_scheduled_bitwise_across_priorities():
+    pol = POLICIES["mixed"]
+    a = spd_matrix(17, 4 * NB, cond=100.0)
+    l_seq = tile_cholesky(a, NB, pol)
+    for priority in ("fifo", "panel_first", "critical_path"):
+        cfg = SchedConfig(priority=priority, workers=4)
+        l, _ = scheduled_tile_cholesky(a, NB, pol, cfg)
+        assert _same_bits(l, l_seq), priority
+
+
+def test_core_schedule_hook():
+    """`tile_cholesky(..., schedule=cfg)` is a drop-in for the loop nest."""
+    pol = POLICIES["three_tier"]
+    a = spd_matrix(3, 4 * NB, cond=100.0)
+    assert _same_bits(tile_cholesky(a, NB, pol, schedule=OOO),
+                      tile_cholesky(a, NB, pol))
+
+
+# ---------------------------------------------------------------------------
+# panel variant vs core.panel_cholesky_banded
+# ---------------------------------------------------------------------------
+
+def _banded_from_dense(a, nb, pol):
+    """Pack a dense SPD matrix into the panel engine's band/off storage."""
+    tiles, p = split_tiles(a, nb)
+    t = min(pol.diag_thick, p)
+    hi = pol.hi
+    lo = pol.lo if pol.mode != "full" else pol.hi
+    band = jnp.zeros((p, t, nb, nb), hi)
+    off = jnp.zeros((p, p, nb, nb), lo)
+    for (i, j), x in tiles.items():
+        d = i - j
+        if d < t:
+            band = band.at[i, d].set(x.astype(hi))
+        else:
+            off = off.at[i, j].set(x.astype(lo))
+    return band, off, p, t
+
+
+@pytest.mark.parametrize("p", PS)
+@pytest.mark.parametrize("label", sorted(POLICIES))
+def test_panel_scheduled_bitwise(label, p):
+    pol = POLICIES[label]
+    a = spd_matrix(100 + p, p * NB, cond=100.0)
+    band, off, _, t = _banded_from_dense(a, NB, pol)
+    band_r, off_r = panel_cholesky_banded(band, off, pol, off_update="square")
+    store, _ = scheduled_cholesky(a, NB, pol, OOO, variant="panel")
+    for (i, j), v in sorted(store.items()):
+        d = i - j
+        ref = band_r[i, d] if d < t else off_r[i, j]
+        assert _same_bits(v, ref), f"panel/{label}/p={p}: tile {(i, j)}"
+
+
+# ---------------------------------------------------------------------------
+# dst variant vs core.dst_cholesky
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", PS)
+@pytest.mark.parametrize("label", sorted(POLICIES))
+def test_dst_scheduled_vs_dense_blocks(label, p):
+    pol = POLICIES[label]
+    a = spd_matrix(200 + p, p * NB, cond=100.0)
+    s_ooo, _ = scheduled_cholesky(a, NB, pol, OOO, variant="dst")
+    s_ord, _ = scheduled_cholesky(a, NB, pol, INORDER, variant="dst")
+    _assert_stores_equal(s_ooo, s_ord, f"dst/{label}/p={p}")
+    for sl, lb in dst_cholesky(a, NB, pol.diag_thick, hi=pol.hi):
+        i0 = sl.start // NB
+        width = (sl.stop - sl.start) // NB
+        for ii in range(width):
+            for jj in range(ii + 1):
+                v = s_ooo[(i0 + ii, i0 + jj)]
+                ref = lb[..., ii * NB:(ii + 1) * NB, jj * NB:(jj + 1) * NB]
+                if width == 1:
+                    # single-tile block: same op, must match bitwise
+                    assert _same_bits(v, ref), f"dst/{label}/p={p}"
+                else:
+                    # tile-level right-looking vs one dense LAPACK block:
+                    # algorithmically different blocking, numerically tight
+                    np.testing.assert_allclose(
+                        np.asarray(v, np.float64), np.asarray(ref, np.float64),
+                        atol=1e-4 * float(jnp.abs(a).max()))
+
+
+@pytest.mark.parametrize("p", (1, 4))
+def test_dst_full_policy_equals_tile_full(p):
+    """full's band covers everything: the dst DAG degenerates to the tile
+    DAG's hi path and must match `tile_cholesky` bitwise."""
+    pol = POLICIES["full"]
+    a = spd_matrix(300 + p, p * NB, cond=100.0)
+    store, _ = scheduled_cholesky(a, NB, pol, OOO, variant="dst")
+    ref_store, _ = split_tiles(tile_cholesky(a, NB, pol), NB)
+    tiles, _ = split_tiles(a, NB)
+    for (i, j) in tiles:
+        assert _same_bits(store[(i, j)], ref_store[(i, j)]), (i, j)
+
+
+# ---------------------------------------------------------------------------
+# property: bitwise equivalence over random problems and policies
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @given(sts.spd_problems(sizes=(64,), tiles=(16,)),
+           sts.mixed_policies(max_thick=2))
+    @settings(max_examples=6, deadline=None)
+    def test_property_scheduled_tile_bitwise(problem, pol):
+        """Property: for any SPD problem and non-dst policy, the threaded
+        out-of-order executor reproduces the sequential engine bitwise."""
+        a, nb = problem
+        l, _ = scheduled_tile_cholesky(a, nb, pol, OOO)
+        assert _same_bits(l, tile_cholesky(a, nb, pol))
+else:
+    @pytest.mark.skip(reason=HYPOTHESIS_SKIP_REASON)
+    def test_property_scheduled_tile_bitwise():
+        pass
