@@ -9,6 +9,9 @@ docstring enumeration did.
 
 Run a subset: python -m benchmarks.run fig4 fig7
 List suites:  python -m benchmarks.run --list
+Telemetry:    python -m benchmarks.run fig4 --metrics out/metrics.jsonl
+              (JSONL event log at that path, human summary table next to
+              it as <path>.summary.txt; see DESIGN.md §13)
 """
 
 import sys
@@ -53,6 +56,22 @@ def _resolve(name: str):
     return importlib.import_module(f".{module}", package=__package__).run
 
 
+def _pop_metrics_path(args: list) -> str | None:
+    """Extract `--metrics <path>` (or `--metrics=<path>`) from args."""
+    for i, a in enumerate(args):
+        if a == "--metrics":
+            if i + 1 >= len(args):
+                print("--metrics requires a path", file=sys.stderr)
+                sys.exit(2)
+            path = args[i + 1]
+            del args[i:i + 2]
+            return path
+        if a.startswith("--metrics="):
+            del args[i]
+            return a.split("=", 1)[1]
+    return None
+
+
 def main() -> None:
     args = sys.argv[1:]
     if any(a in ("--list", "-h", "--help") for a in args):
@@ -60,20 +79,40 @@ def main() -> None:
         print()
         print(suite_table())
         return
+    metrics_path = _pop_metrics_path(args)
     unknown = [a for a in args if a not in SUITES]
     if unknown:
         print(f"unknown suite(s): {unknown}", file=sys.stderr)
         print(suite_table(), file=sys.stderr)
         sys.exit(2)
     wanted = args or list(SUITES)
+
+    recording = None
+    if metrics_path is not None:
+        from repro import obs
+        recording = obs.recording()
+        recording.__enter__()
+
     print("name,us_per_call,derived")
     failures = []
-    for name in wanted:
-        try:
-            _resolve(name)()
-        except Exception:
-            failures.append(name)
-            traceback.print_exc()
+    try:
+        for name in wanted:
+            try:
+                _resolve(name)()
+            except Exception:
+                failures.append(name)
+                traceback.print_exc()
+    finally:
+        if recording is not None:
+            from repro import obs
+            rec = obs.get_recorder()
+            obs.write_jsonl(rec, metrics_path)
+            summary = obs.summary_table(rec)
+            with open(f"{metrics_path}.summary.txt", "w") as fh:
+                fh.write(summary + "\n")
+            recording.__exit__(None, None, None)
+            print(f"# metrics: {metrics_path} "
+                  f"(+ {metrics_path}.summary.txt)", file=sys.stderr)
     if failures:
         print(f"# FAILED suites: {failures}", file=sys.stderr)
         sys.exit(1)

@@ -38,6 +38,14 @@ machine-checked invariant over `src/repro/`:
       (Out-dtype equality is enforced dynamically by the verify/
       conformance sweep; the static layer covers the shape plumbing.)
 
+  obs-span-context
+      Every `span(...)`/`maybe_span(...)` telemetry call must be
+      context-managed (`with obs.span(...):` or handed to
+      `enter_context(...)`).  A bare call creates a timer that is never
+      closed, so the span silently vanishes from every exporter -- the
+      observability analogue of an unclosed file handle.  `repro/obs/`
+      itself (which defines and returns span objects) is exempt.
+
 Suppression: per-line `# repro: disable=<rule>[,<rule>] -- reason` pragmas
 (any line of a multi-line statement), or entries in the committed
 `baseline.json` (see baseline.py) for grandfathered findings.
@@ -56,6 +64,7 @@ RULES = (
     "accum-dtype",
     "x64-guard",
     "pallas-blockspec-contract",
+    "obs-span-context",
 )
 
 # Packages where ANY literal-dtype astype is a violation (dtypes must flow
@@ -71,6 +80,9 @@ NARROW_DTYPES = frozenset({
 FLOAT_DTYPES = NARROW_DTYPES | {"float32", "float64"}
 
 MATMUL_FUNCS = frozenset({"matmul", "dot", "einsum", "tensordot", "dot_general"})
+
+# Telemetry span constructors (repro.obs): must be context-managed.
+SPAN_FUNCS = frozenset({"span", "maybe_span"})
 
 # Attribute / name spellings that mark a cast target as "lo tier".
 LO_TIER_NAMES = frozenset({"lo", "lo2", "solve_dtype"})
@@ -325,6 +337,41 @@ def _check_pallas_calls(tree: ast.AST, relpath: str, source_lines: list[str],
     return findings
 
 
+def _check_span_context(tree: ast.AST, relpath: str, source_lines: list[str],
+                        pragmas) -> list[Finding]:
+    """Flag span()/maybe_span() calls not used as `with` context expressions
+    (or fed to ExitStack.enter_context)."""
+    allowed: set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                ce = item.context_expr
+                if isinstance(ce, ast.Call) \
+                        and _func_attr_name(ce.func) in SPAN_FUNCS:
+                    allowed.add(id(ce))
+        elif isinstance(node, ast.Call) \
+                and _func_attr_name(node.func) == "enter_context":
+            for a in node.args:
+                if isinstance(a, ast.Call) \
+                        and _func_attr_name(a.func) in SPAN_FUNCS:
+                    allowed.add(id(a))
+    findings = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _func_attr_name(node.func) in SPAN_FUNCS):
+            continue
+        if id(node) in allowed \
+                or _suppressed(pragmas, node, "obs-span-context"):
+            continue
+        findings.append(Finding(
+            "obs-span-context", relpath, node.lineno,
+            "span()/maybe_span() must be context-managed (`with "
+            "obs.span(...):` or enter_context(...)) -- a bare call opens a "
+            "timer that is never closed",
+            source_lines[node.lineno - 1].strip()))
+    return findings
+
+
 def _public_functions(tree: ast.AST) -> dict[str, ast.FunctionDef]:
     return {n.name: n for n in tree.body if isinstance(n, ast.FunctionDef)
             and not n.name.startswith("_")}  # type: ignore[union-attr]
@@ -402,6 +449,8 @@ def lint_source(source: str, relpath: str) -> list[Finding]:
     findings += _check_x64(tree, relpath, source, lines, pragmas)
     if pkg == "kernels":
         findings += _check_pallas_calls(tree, relpath, lines, pragmas)
+    if pkg != "obs":   # obs defines/returns span objects; everyone else
+        findings += _check_span_context(tree, relpath, lines, pragmas)
     return findings
 
 

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..covariance.matern import matern_covariance
 from .kriging import krige_from_factor, krige_pmse, pmse
 from .likelihood import loglik_from_factor, make_factor_fn, make_loglik
@@ -259,9 +260,19 @@ class BatchEngine:
         return thetas
 
     # ---- public API ----------------------------------------------------
+    # Every public entry point is a jit dispatch boundary (the host hands a
+    # candidate batch to the device and blocks on the answer), so each gets
+    # a telemetry span + a candidates-evaluated counter when obs is on.
     def loglik(self, thetas) -> jnp.ndarray:
         """(B, d) candidate thetas -> (B,) log-likelihoods, one device call."""
-        return self._loglik_batch(self._prepare(thetas))
+        thetas = self._prepare(thetas)
+        with obs.span("batch.loglik", b=int(thetas.shape[0]),
+                      path=self.plan.path) as sp:
+            out = self._loglik_batch(thetas)
+            if sp is not obs.NULL_SPAN:
+                obs.inc("batch.candidates", int(thetas.shape[0]))
+                out.block_until_ready()
+            return out
 
     def loglik_sequential(self, thetas) -> np.ndarray:
         """Reference path: one jitted evaluation per candidate with a host
@@ -269,13 +280,19 @@ class BatchEngine:
         `core/mle.py` (`float(fn(p))` per candidate).  Kept for benchmarks
         and parity tests."""
         thetas = self._prepare(thetas)
-        return np.array([float(self._loglik_single(t)) for t in thetas])
+        with obs.span("batch.loglik_sequential", b=int(thetas.shape[0])):
+            return np.array([float(self._loglik_single(t)) for t in thetas])
 
     def krige_pmse(self, thetas) -> jnp.ndarray:
         """(B, d) candidate thetas -> (B,) held-out kriging PMSE."""
         if self._pmse_batch is None:
             raise ValueError("engine was built without locs_new/y_true")
-        return self._pmse_batch(self._prepare(thetas))
+        thetas = self._prepare(thetas)
+        with obs.span("batch.krige_pmse", b=int(thetas.shape[0])) as sp:
+            out = self._pmse_batch(thetas)
+            if sp is not obs.NULL_SPAN:
+                out.block_until_ready()
+            return out
 
     def evaluate(self, thetas, *, with_pmse: Optional[bool] = None) -> BatchResult:
         """One planned batch: log-likelihoods (+ PMSE when available).
@@ -286,14 +303,18 @@ class BatchEngine:
         thetas = self._prepare(thetas)
         if with_pmse is None:
             with_pmse = self._pmse_batch is not None
-        if with_pmse and self._eval_batch is not None:
-            ll, scores = self._eval_batch(thetas)
-            return BatchResult(thetas=np.asarray(thetas),
-                               logliks=np.asarray(ll),
-                               pmse=np.asarray(scores))
-        ll = np.asarray(self.loglik(thetas))
-        scores = np.asarray(self.krige_pmse(thetas)) if with_pmse else None
-        return BatchResult(thetas=np.asarray(thetas), logliks=ll, pmse=scores)
+        with obs.span("batch.evaluate", b=int(thetas.shape[0]),
+                      fused=bool(with_pmse and self._eval_batch is not None)):
+            if with_pmse and self._eval_batch is not None:
+                obs.inc("batch.candidates", int(thetas.shape[0]))
+                ll, scores = self._eval_batch(thetas)
+                return BatchResult(thetas=np.asarray(thetas),
+                                   logliks=np.asarray(ll),
+                                   pmse=np.asarray(scores))
+            ll = np.asarray(self.loglik(thetas))
+            scores = np.asarray(self.krige_pmse(thetas)) if with_pmse else None
+            return BatchResult(thetas=np.asarray(thetas), logliks=ll,
+                               pmse=scores)
 
 
 def evaluate_batch(locs, z, thetas, plan: BatchPlan, *, locs_new=None,

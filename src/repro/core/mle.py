@@ -22,12 +22,32 @@ parallel likelihood evaluations in the ExaGeoStat follow-up work
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .. import obs
+
+
+def _timed_eval(fn: Callable | None, metric: str) -> Callable | None:
+    """Wrap an optimizer's (host-side, blocking) evaluation function so each
+    call lands one latency sample in the `metric` histogram.  Identity when
+    telemetry is off -- the optimizer hot loop pays nothing."""
+    if fn is None or not obs.enabled():
+        return fn
+
+    def timed(*args):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        obs.observe(metric, time.perf_counter() - t0)
+        obs.inc(metric + ".calls")
+        return out
+
+    return timed
 
 
 @dataclass
@@ -60,6 +80,11 @@ def neldermead(fn: Callable, x0, *, xtol: float = 1e-3, ftol: float = 1e-6,
     identical to the sequential algorithm's either way.
     """
     x0 = np.asarray(x0, dtype=np.float64)
+    # per-evaluation latency histograms (mle.eval_seconds /
+    # mle.eval_batch_seconds): each fn call is a device round-trip, the
+    # paper's "time per iteration" unit
+    fn = _timed_eval(fn, "mle.eval_seconds")
+    fn_batch = _timed_eval(fn_batch, "mle.eval_batch_seconds")
     d = x0.size
     pts = [x0] + [x0 + scale * np.eye(d)[i] for i in range(d)]
     simplex = np.stack(pts)
@@ -157,9 +182,12 @@ def fit_mle(loglik_fn: Callable, theta0, *, xtol: float = 1e-3,
             v = float(v)
             return 1e10 if not np.isfinite(v) else -v
 
-    x, f, n_evals, n_iters, conv, hist = neldermead(
-        neg_ll_log, np.log(theta0), xtol=xtol, max_iters=max_iters,
-        fn_batch=neg_batch)
+    with obs.span("mle.fit", driver="neldermead",
+                  batched=neg_batch is not None):
+        x, f, n_evals, n_iters, conv, hist = neldermead(
+            neg_ll_log, np.log(theta0), xtol=xtol, max_iters=max_iters,
+            fn_batch=neg_batch)
+    obs.inc("mle.fits")
     return MLEResult(theta=np.exp(x), loglik=-f, n_evals=n_evals,
                      n_iters=n_iters, converged=conv,
                      history=[(np.exp(h[0]), -h[1]) for h in hist])
@@ -181,33 +209,39 @@ def fit_mle_grid(batched_loglik_fn: Callable, bounds, *, num: int = 12,
     bounds = np.asarray(bounds, dtype=np.float64)
     if bounds.ndim != 2 or bounds.shape[1] != 2 or np.any(bounds <= 0.0):
         raise ValueError("bounds must be (d, 2) with positive entries")
+    batched_loglik_fn = _timed_eval(batched_loglik_fn,
+                                    "mle.eval_batch_seconds")
     d = bounds.shape[0]
     lo0, hi0 = np.log(bounds[:, 0]), np.log(bounds[:, 1])
     lo, hi = lo0.copy(), hi0.copy()
     best_x, best_f = None, -np.inf
     n_evals = 0
     history = []
-    for _ in range(refine):
-        axes = [np.linspace(lo[i], hi[i], num) for i in range(d)]
-        mesh = np.stack(np.meshgrid(*axes, indexing="ij"), axis=-1).reshape(-1, d)
-        ll = np.asarray(batched_loglik_fn(jnp.exp(jnp.asarray(mesh))),
-                        dtype=np.float64)
-        ll = np.where(np.isfinite(ll), ll, -np.inf)
-        n_evals += mesh.shape[0]
-        k = int(np.argmax(ll))
-        if ll[k] > best_f:
-            best_f, best_x = float(ll[k]), mesh[k].copy()
-        if best_x is None:
-            raise ValueError(
-                "fit_mle_grid: every candidate log-likelihood in the first "
-                f"{mesh.shape[0]}-point grid level was non-finite; widen or "
-                "shift `bounds` (the covariance is likely not SPD there)")
-        history.append((np.exp(best_x), best_f))
-        # recenter on the incumbent, clamped so refined grids (and hence the
-        # returned theta) never leave the caller's bounds box
-        span = (hi - lo) * shrink
-        lo = np.clip(best_x - span / 2.0, lo0, hi0)
-        hi = np.clip(best_x + span / 2.0, lo0, hi0)
+    with obs.span("mle.fit", driver="grid", levels=refine):
+        for _ in range(refine):
+            axes = [np.linspace(lo[i], hi[i], num) for i in range(d)]
+            mesh = np.stack(np.meshgrid(*axes, indexing="ij"),
+                            axis=-1).reshape(-1, d)
+            ll = np.asarray(batched_loglik_fn(jnp.exp(jnp.asarray(mesh))),
+                            dtype=np.float64)
+            ll = np.where(np.isfinite(ll), ll, -np.inf)
+            n_evals += mesh.shape[0]
+            k = int(np.argmax(ll))
+            if ll[k] > best_f:
+                best_f, best_x = float(ll[k]), mesh[k].copy()
+            if best_x is None:
+                raise ValueError(
+                    "fit_mle_grid: every candidate log-likelihood in the "
+                    f"first {mesh.shape[0]}-point grid level was non-finite; "
+                    "widen or shift `bounds` (the covariance is likely not "
+                    "SPD there)")
+            history.append((np.exp(best_x), best_f))
+            # recenter on the incumbent, clamped so refined grids (and hence
+            # the returned theta) never leave the caller's bounds box
+            span = (hi - lo) * shrink
+            lo = np.clip(best_x - span / 2.0, lo0, hi0)
+            hi = np.clip(best_x + span / 2.0, lo0, hi0)
+    obs.inc("mle.fits")
     return MLEResult(theta=np.exp(best_x), loglik=best_f, n_evals=n_evals,
                      n_iters=refine, converged=True, history=history)
 

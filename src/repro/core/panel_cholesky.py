@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 
+from .. import obs
 from ..covariance.matern import matern_covariance
 from .precision import PrecisionPolicy, lo_matmul
 
@@ -128,6 +129,21 @@ def panel_cholesky_banded(band, off, policy: PrecisionPolicy, *,
                 "chunked" -- per-column-block lo GEMMs over the lower
                              trapezoid only (near-exact FLOPs).
     """
+    # dispatch-boundary telemetry: no-op when disabled or when `band` is a
+    # tracer (the BatchEngine panel path jits/vmaps this whole function)
+    with obs.maybe_span("core.panel_cholesky", band,
+                        p=band.shape[0], nb=band.shape[-1],
+                        off_update=off_update) as sp:
+        band, off = _panel_cholesky_banded(band, off, policy,
+                                           off_update=off_update)
+        if sp is not obs.NULL_SPAN:
+            band.block_until_ready()
+            off.block_until_ready()
+        return band, off
+
+
+def _panel_cholesky_banded(band, off, policy: PrecisionPolicy, *,
+                           off_update: str):
     p, t, nb, _ = band.shape
     hi = policy.hi
     lo = off.dtype
@@ -235,9 +251,13 @@ def geostat_loglik_step(locs, z, theta, *, nb: int, policy: PrecisionPolicy,
     This is the unit the paper benchmarks ("time per iteration") and the
     function the geostat dry-run lowers on the production mesh.
     """
-    band, off = build_banded_covariance(locs, theta, nb=nb, policy=policy,
-                                        nu_static=nu_static, metric=metric,
-                                        jitter=jitter)
-    t = min(policy.diag_thick, band.shape[0])
-    band, off = panel_cholesky_banded(band, off, policy, off_update=off_update)
-    return banded_loglik(band, off, z, t)
+    with obs.maybe_span("core.panel_loglik_step", locs, theta,
+                        n=locs.shape[0] if hasattr(locs, "shape") else None,
+                        nb=nb, mode=policy.mode):
+        band, off = build_banded_covariance(locs, theta, nb=nb, policy=policy,
+                                            nu_static=nu_static,
+                                            metric=metric, jitter=jitter)
+        t = min(policy.diag_thick, band.shape[0])
+        band, off = panel_cholesky_banded(band, off, policy,
+                                          off_update=off_update)
+        return banded_loglik(band, off, z, t)

@@ -29,6 +29,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 
+from .. import obs
 from .precision import PrecisionPolicy, lo_matmul
 
 
@@ -90,6 +91,17 @@ def tile_cholesky(a, nb: int, policy: PrecisionPolicy, *, schedule=None):
         from ..sched.runtime import scheduled_tile_cholesky
         l, _report = scheduled_tile_cholesky(a, nb, policy, schedule)
         return l
+    # telemetry at the dispatch boundary only: under jit/vmap `a` is a
+    # tracer and maybe_span degrades to the no-op (DESIGN.md §13)
+    with obs.maybe_span("core.tile_cholesky", a, n=a.shape[-1], nb=nb,
+                        mode=policy.mode) as sp:
+        l = _tile_cholesky_eager(a, nb, policy)
+        if sp is not obs.NULL_SPAN:
+            l.block_until_ready()   # time the math, not the async dispatch
+        return l
+
+
+def _tile_cholesky_eager(a, nb: int, policy: PrecisionPolicy):
     hi, lo = policy.hi, policy.lo
     tiles, p = split_tiles(a, nb)
 

@@ -24,6 +24,8 @@ Key modelling assumptions (documented per EXPERIMENTS.md §Methodology):
 from __future__ import annotations
 
 import dataclasses
+import json
+from pathlib import Path
 
 from ..models.config import ArchConfig
 from ..configs.shapes import ShapeSpec
@@ -283,6 +285,42 @@ def geostat_cell_cost(n: int, nb: int, diag_thick: int, *, chips: int,
 TIER_WEIGHT = {"hi": 6.0, "lo": 1.0, "lo2": 0.5}
 _TIER_WEIGHT = TIER_WEIGHT  # back-compat alias
 
+# Measured per-(kind, tier) kernel times, persisted by
+# `python -m repro.obs calibrate` (see obs/calibrate.py): the StarPU-style
+# alternative to the analytic weights above.  The committed table is a
+# sample measured on the CI container's XLA CPU backend -- re-run the
+# calibrator on your own hardware before trusting absolute numbers.
+CALIBRATION_PATH = Path(__file__).resolve().parent / "calibration.json"
+
+_UNSET = object()
+_calibration_cache: object = _UNSET   # dict | None once resolved
+
+
+def load_calibration(path=None) -> dict | None:
+    """Read a calibration table; returns its costs dict or None if absent.
+
+    With no `path`, reads (and caches) the persisted CALIBRATION_PATH
+    table.  Costs map "KIND/tier" ("CONVERT" flat) -> measured
+    microseconds; any key a DAG emits that the table lacks falls back to
+    the analytic weight inside `task_virtual_cost`.
+    """
+    global _calibration_cache
+    if path is not None:
+        return json.loads(Path(path).read_text())["costs"]
+    if _calibration_cache is _UNSET:
+        if CALIBRATION_PATH.exists():
+            _calibration_cache = json.loads(
+                CALIBRATION_PATH.read_text())["costs"]
+        else:
+            _calibration_cache = None
+    return _calibration_cache
+
+
+def set_calibration(costs: dict | None) -> None:
+    """Inject a cost table (tests / sweeps); None drops back to the file."""
+    global _calibration_cache
+    _calibration_cache = _UNSET if costs is None else dict(costs)
+
 # Default virtual duration of a CONVERT (dlag2s/sconv2d) in the same
 # bf16-equivalent nb^3 units as the compute weights below: an nb x nb tile
 # moves ~nb^2 (BF16 + F32) bytes against ~nb^3-scale math, so at the nb the
@@ -291,17 +329,40 @@ _TIER_WEIGHT = TIER_WEIGHT  # back-compat alias
 CONVERT_COST_UNITS = 0.25
 
 
-def task_virtual_cost(task, *, convert_cost: float = CONVERT_COST_UNITS) -> float:
+def task_virtual_cost(task, *, convert_cost: float = CONVERT_COST_UNITS,
+                      calibrated: bool = False,
+                      table: dict | None = None) -> float:
     """Virtual duration of one `repro.analysis.dag.Task` for the simulated
-    scheduler backend, in bf16-equivalent nb^3 units.
+    scheduler backend.
 
-    Compute tasks cost their tile-op FLOP units (POTRF 1/3, TRSM/SYRK 1,
-    GEMM 2) scaled by the per-tier MXU throughput weight; CONVERTs cost a
-    flat data-movement term.  This is the same per-tier weighting
-    `geostat_dag_cost` applies to whole-DAG totals, applied per task.
+    Analytic path (default): tile-op FLOP units (POTRF 1/3, TRSM/SYRK 1,
+    GEMM 2) scaled by the per-tier MXU throughput weight, in
+    bf16-equivalent nb^3 units; CONVERTs cost a flat data-movement term.
+    This is the same per-tier weighting `geostat_dag_cost` applies to
+    whole-DAG totals, applied per task.
+
+    Calibrated path (`calibrated=True`): measured microseconds from the
+    persisted `launch/calibration.json` table (or an injected `table`),
+    produced by `python -m repro.obs calibrate`.  Keys the table lacks
+    fall back to the analytic weight -- the two unit systems differ, so a
+    partially-calibrated table distorts relative priorities; the shipped
+    calibrator measures every pair the engines emit precisely to avoid
+    that.  Raises FileNotFoundError when no table exists at all rather
+    than silently pricing an "analytically calibrated" schedule.
     """
     from ..analysis.dag import _FLOP_UNITS
 
+    if calibrated:
+        costs = table if table is not None else load_calibration()
+        if costs is None:
+            raise FileNotFoundError(
+                f"calibrated=True but no calibration table at "
+                f"{CALIBRATION_PATH}; run `python -m repro.obs calibrate` "
+                "(or inject one via set_calibration)")
+        key = "CONVERT" if task.kind == "CONVERT" \
+            else f"{task.kind}/{task.tier}"
+        if key in costs:
+            return float(costs[key])
     if task.kind == "CONVERT":
         return float(convert_cost)
     return _FLOP_UNITS[task.kind] * TIER_WEIGHT[task.tier]

@@ -1,0 +1,124 @@
+"""Kernel-time calibration: measure per-(kind, tier) tile-op wall times.
+
+The simulated scheduler backend prices every task with
+`launch.costmodel.task_virtual_cost` -- analytic MXU throughput weights
+(fp32 ~6x bf16, fp8 ~0.5x) that describe a TPU v5e, not whatever backend
+this container actually runs.  ROADMAP asks for the StarPU move: measure
+the per-kind kernel times once, persist them, and let the simulator
+consume measured durations instead of analytic ones.
+
+Measurement strategy: replay one engine task graph *in order* with the
+real executor's own kernels (`sched.kernels.KernelSet` -- exactly the
+math `execute()` runs per task), timing each task around a
+`block_until_ready()`.  The operands are therefore real factorization
+intermediates at their real dtypes, not synthetic tiles, and every (kind,
+tier) pair the DAG can emit shows up with its true operand mix.  One
+warmup replay compiles every tile-op shape; `reps` timed replays follow;
+the table stores the per-pair median in microseconds.
+
+The default cell (tile variant, mixed fp32/bf16 policy, p=6) emits every
+execution pair the three engines use: POTRF/hi, TRSM/hi, TRSM/lo,
+SYRK/hi, GEMM/hi, GEMM/lo, and CONVERT.  (lo2 is a *storage* tier only --
+fp8 tiles are converted to lo before any compute task touches them, so
+there is nothing to measure at lo2; `task_virtual_cost` keeps the
+analytic weight for any key a table is missing.)
+
+The persisted table lives at `launch/calibration.json`, next to the cost
+model that consumes it (`task_virtual_cost(..., calibrated=True)`).
+"""
+
+from __future__ import annotations
+
+import json
+import statistics
+import time
+from pathlib import Path
+
+from . import recorder as obs
+
+
+def cost_key(task) -> str:
+    """Calibration-table key for one `repro.analysis.dag.Task`."""
+    return "CONVERT" if task.kind == "CONVERT" else f"{task.kind}/{task.tier}"
+
+
+def _replay_timed(graph, kernels, samples: dict[str, list[float]] | None):
+    """In-order replay of `graph`, timing each task; mirrors `execute()`'s
+    operand fetch so every kernel sees the arrays the executor would."""
+    values: list = [None] * graph.n
+    for idx, task in enumerate(graph.tasks):
+        reads = task.reads if task.kind != "CONVERT" else (task.target,)
+        ops = [values[prod] if prod >= 0 else kernels.initial(r)
+               for r, prod in zip(reads, graph.deps[idx])]
+        t0 = time.perf_counter()
+        out = kernels.run(task, ops)
+        out.block_until_ready()
+        dt = time.perf_counter() - t0
+        values[idx] = out
+        if samples is not None:
+            samples.setdefault(cost_key(task), []).append(dt * 1e6)
+
+
+def measure_kernel_times(*, nb: int = 32, p: int = 6, reps: int = 3,
+                         variant: str = "tile", policy=None,
+                         seed: int = 0) -> tuple[dict[str, float], dict]:
+    """Measure per-(kind, tier) tile-op times; returns (costs_us, meta).
+
+    costs_us maps "KIND/tier" (CONVERT: flat "CONVERT") to the median
+    measured microseconds across `reps` in-order replays of the cell's
+    task graph (one unmeasured warmup replay compiles everything first).
+    """
+    import jax
+
+    from ..core.precision import PrecisionPolicy
+    from ..sched.kernels import make_kernels
+    from ..sched.runtime import build_graph
+    from ..verify.generators import spd_matrix
+
+    policy = policy or PrecisionPolicy.tpu(2)
+    n = p * nb
+    a = spd_matrix(seed, n, cond=100.0)
+    graph = build_graph(variant, p, policy)
+    kernels = make_kernels(variant, a, nb, policy)
+
+    with obs.span("obs.calibrate", variant=variant, p=p, nb=nb, reps=reps):
+        _replay_timed(graph, kernels, None)          # warmup: compile shapes
+        samples: dict[str, list[float]] = {}
+        for _ in range(reps):
+            _replay_timed(graph, kernels, samples)
+
+    costs = {k: statistics.median(v) for k, v in sorted(samples.items())}
+    meta = {
+        "units": "microseconds",
+        "variant": variant,
+        "policy_mode": policy.mode,
+        "p": p,
+        "nb": nb,
+        "reps": reps,
+        "backend": jax.default_backend(),
+        "n_samples": {k: len(v) for k, v in sorted(samples.items())},
+    }
+    return costs, meta
+
+
+def write_calibration(costs: dict[str, float], meta: dict,
+                      path=None) -> Path:
+    """Persist the measured cost table where the cost model reads it."""
+    from ..launch.costmodel import CALIBRATION_PATH, set_calibration
+
+    path = Path(path) if path is not None else CALIBRATION_PATH
+    payload = {"meta": meta, "costs": {k: round(v, 3)
+                                       for k, v in costs.items()}}
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    if path == CALIBRATION_PATH:
+        set_calibration(None)    # drop the cache so the new table is read
+    return path
+
+
+def calibrate(*, nb: int = 32, p: int = 6, reps: int = 3,
+              variant: str = "tile", policy=None, path=None) -> Path:
+    """Measure + persist in one call (the `python -m repro.obs calibrate`
+    entry point).  Returns the path written."""
+    costs, meta = measure_kernel_times(nb=nb, p=p, reps=reps,
+                                       variant=variant, policy=policy)
+    return write_calibration(costs, meta, path)

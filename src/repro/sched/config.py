@@ -32,8 +32,15 @@ class SchedConfig:
     backend: str = "real"             # "real" threads | "sim" virtual time
     convert_cost: float = CONVERT_COST_UNITS  # sim CONVERT duration (units)
     trace_path: str | None = None     # write Chrome trace JSON here if set
+    calibrated: bool = False          # price tasks with the measured
+                                      # launch/calibration.json table
+                                      # (python -m repro.obs calibrate)
+                                      # instead of analytic MXU weights
 
     def __post_init__(self):
+        if not isinstance(self.calibrated, bool):
+            raise ValueError(
+                f"calibrated must be a bool, got {self.calibrated!r}")
         if self.priority not in PRIORITIES:
             raise ValueError(
                 f"unknown scheduler priority {self.priority!r}; "

@@ -40,6 +40,7 @@ from ..analysis.dag import (
     task_dependencies,
 )
 from ..launch.costmodel import task_virtual_cost
+from .. import obs
 from .config import SchedConfig
 
 _KIND_RANK = {"POTRF": 0, "CONVERT": 1, "TRSM": 2, "SYRK": 3, "GEMM": 4}
@@ -84,7 +85,8 @@ def downstream_cost(graph: TaskGraph, config: SchedConfig) -> list[float]:
     producers, run backward over consumers: a task's priority is its own
     cost plus the heaviest chain hanging off it.
     """
-    costs = [task_virtual_cost(t, convert_cost=config.convert_cost)
+    costs = [task_virtual_cost(t, convert_cost=config.convert_cost,
+                               calibrated=config.calibrated)
              for t in graph.tasks]
     down = [0.0] * graph.n
     for idx in range(graph.n - 1, -1, -1):   # emission order is topological
@@ -168,11 +170,20 @@ def simulate(graph: TaskGraph, config: SchedConfig) -> SchedReport:
 
     Deterministic by construction: ties break on (priority key, task
     index) in the ready heap and (finish time, worker id) in the event
-    heap, and task durations come from the analytic cost model -- the
+    heap, and task durations come from the cost model (analytic weights,
+    or the measured calibration table when `config.calibrated`) -- the
     same config always yields the same makespan, bit for bit.
     """
+    with obs.span("sched.simulate", variant=graph.variant, p=graph.p,
+                  workers=config.workers, priority=config.priority,
+                  calibrated=config.calibrated):
+        return _simulate(graph, config)
+
+
+def _simulate(graph: TaskGraph, config: SchedConfig) -> SchedReport:
     keys = priority_keys(graph, config)
-    costs = [task_virtual_cost(t, convert_cost=config.convert_cost)
+    costs = [task_virtual_cost(t, convert_cost=config.convert_cost,
+                               calibrated=config.calibrated)
              for t in graph.tasks]
     ndeps = graph.indegree()
     ready = [keys[i] for i in range(graph.n) if ndeps[i] == 0]
@@ -256,6 +267,11 @@ def execute(graph: TaskGraph, config: SchedConfig, kernels) -> tuple[dict, Sched
     state = _ExecState(graph, keys)
     n = graph.n
     t0 = time.perf_counter()
+    telemetry = obs.enabled()
+    if telemetry:
+        # anchor for obs.export.merged_chrome_trace: host spans and the
+        # scheduler's per-task events share this perf_counter origin
+        obs.gauge("sched.t0", t0)
 
     def fetch(idx: int) -> list:
         task = graph.tasks[idx]
@@ -291,6 +307,12 @@ def execute(graph: TaskGraph, config: SchedConfig, kernels) -> tuple[dict, Sched
                     state.cond.notify_all()
                 return
             end = time.perf_counter()
+            if telemetry:
+                # per-(kind, tier) wall times -- the per-task profile the
+                # calibrator's summary and the Prometheus exposition report
+                obs.observe(f"sched.task.{task.kind}.{task.tier}",
+                            end - start)
+                obs.inc(f"sched.tasks.{task.kind}")
             with state.cond:
                 state.values[idx] = out
                 state.done += 1
@@ -367,7 +389,9 @@ def scheduled_cholesky(a, nb: int, policy, config: SchedConfig, *,
     p = n // nb
     graph = build_graph(variant, p, policy)
     kernels = make_kernels(variant, a, nb, policy)
-    store, report = execute(graph, config, kernels)
+    with obs.span("sched.execute", variant=variant, p=p,
+                  workers=config.workers, priority=config.priority):
+        store, report = execute(graph, config, kernels)
     _maybe_trace(report, config)
     return store, report
 

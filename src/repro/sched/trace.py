@@ -82,7 +82,10 @@ def validate_trace(trace: dict) -> None:
     events = trace["traceEvents"]
     if not isinstance(events, list):
         raise ValueError("traceEvents must be a list")
-    per_tid: dict[int, list[tuple[float, float]]] = {}
+    # tracks are keyed on (pid, tid): merged traces (repro.obs) put host
+    # spans on pid 1 with thread-local tids that may collide numerically
+    # with pid-0 worker tids -- those are different tracks, not overlaps.
+    per_track: dict[tuple, list[tuple[float, float, str]]] = {}
     for ev in events:
         if not isinstance(ev, dict) or "ph" not in ev:
             raise ValueError(f"malformed event {ev!r}")
@@ -96,16 +99,17 @@ def validate_trace(trace: dict) -> None:
             raise ValueError(f"non-finite/negative ts in {ev!r}")
         if not (isinstance(dur, (int, float)) and dur >= 0):
             raise ValueError(f"non-finite/negative dur in {ev!r}")
-        per_tid.setdefault(ev["tid"], []).append((ts, ts + dur))
-    if not per_tid:
+        per_track.setdefault((ev["pid"], ev["tid"]), []).append(
+            (ts, ts + dur, str(ev["name"])))
+    if not per_track:
         raise ValueError("trace has no complete ('X') events")
-    for tid, spans in per_tid.items():
+    for (pid, tid), spans in per_track.items():
         spans.sort()
-        for (s0, e0), (s1, _) in zip(spans, spans[1:]):
+        for (s0, e0, n0), (s1, _, n1) in zip(spans, spans[1:]):
             if s1 < e0:
                 raise ValueError(
-                    f"worker {tid}: overlapping tasks "
-                    f"([{s0}, {e0}) vs start {s1})")
+                    f"track pid={pid} tid={tid}: {n0!r} [{s0}, {e0}) "
+                    f"overlaps {n1!r} starting at {s1}")
 
 
 def load_and_validate(path) -> dict:
@@ -128,8 +132,10 @@ def summary_rows(report: "SchedReport") -> list[dict]:
     for w, busy in enumerate(report.worker_busy):
         n = sum(1 for e in report.events if e.worker == w)
         util = busy / report.makespan if report.makespan > 0 else 1.0
+        idle = max(report.makespan - busy, 0.0)
         rows.append({"scope": "worker", "name": f"worker{w}", "tasks": n,
-                     "busy": busy, "util": util})
+                     "busy": busy, "util": util, "idle": idle,
+                     "idle_frac": 1.0 - util})
     return rows
 
 
@@ -147,5 +153,6 @@ def format_summary(report: "SchedReport") -> str:
                          f"busy {row['busy']:.3f}")
         else:
             lines.append(f"  {row['name']}: {row['tasks']:>5} tasks, "
-                         f"busy {row['busy']:.3f}, util {row['util']:.3f}")
+                         f"busy {row['busy']:.3f}, util {row['util']:.3f}, "
+                         f"idle {row['idle']:.3f} ({row['idle_frac']:.1%})")
     return "\n".join(lines)

@@ -25,6 +25,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core.likelihood import dst_loglik, loglik_from_factor
 from ..core.panel_cholesky import (
     assemble_from_banded,
@@ -109,47 +110,51 @@ def sweep_cholesky(problems=None, policies=None, *,
     for prob in problems:
         # --- faithful tile engine, every policy ---------------------------
         for label, pol in policies.items():
-            l = tile_cholesky(prob.cov.astype(pol.hi), prob.nb, pol)
-            ll = float(loglik_from_factor(l, prob.z))
+            rid = f"chol/tile/{label}/{prob.name}"
+            with obs.span("verify.cell", id=rid, kind="cholesky"):
+                l = tile_cholesky(prob.cov.astype(pol.hi), prob.nb, pol)
+                ll = float(loglik_from_factor(l, prob.z))
             records.append(_chol_record(
-                f"chol/tile/{label}/{prob.name}", prob, pol.mode,
-                dtype_pair(pol), pol.diag_thick, np.asarray(l, np.float64),
-                ll))
+                rid, prob, pol.mode, dtype_pair(pol), pol.diag_thick,
+                np.asarray(l, np.float64), ll))
 
         # --- the paper's literal CPU pair (fp64 band / fp32 off-band) ----
         if paper_pair:
-            with jax.experimental.enable_x64():
-                pol = PrecisionPolicy.paper_cpu(diag_thick=2)
-                cov64 = jnp.asarray(np.asarray(prob.cov, np.float64))
-                l = tile_cholesky(cov64, prob.nb, pol)
-                ll = float(loglik_from_factor(l, prob.z))
+            rid = f"chol/tile/paper_f64f32_t2/{prob.name}"
+            with obs.span("verify.cell", id=rid, kind="cholesky"):
+                with jax.experimental.enable_x64():
+                    pol = PrecisionPolicy.paper_cpu(diag_thick=2)
+                    cov64 = jnp.asarray(np.asarray(prob.cov, np.float64))
+                    l = tile_cholesky(cov64, prob.nb, pol)
+                    ll = float(loglik_from_factor(l, prob.z))
             records.append(_chol_record(
-                f"chol/tile/paper_f64f32_t2/{prob.name}", prob, pol.mode,
-                dtype_pair(pol), pol.diag_thick, np.asarray(l, np.float64),
-                ll))
+                rid, prob, pol.mode, dtype_pair(pol), pol.diag_thick,
+                np.asarray(l, np.float64), ll))
 
         # --- banded panel performance path (production mixed pair) -------
-        pol = policies.get("mixed_f32bf16_t2") or PrecisionPolicy.tpu(2)
-        band, off = build_banded_covariance(
-            prob.locs, prob.theta, nb=prob.nb, policy=pol, nu_static=0.5,
-            jitter=1e-6)
-        t = min(pol.diag_thick, prob.p)
-        band, off = panel_cholesky_banded(band, off, pol)
-        l_panel = assemble_from_banded(band, off, t)
-        ll_panel = float(banded_loglik(band, off, prob.z, t))
+        rid = f"chol/panel/mixed_f32bf16_t2/{prob.name}"
+        with obs.span("verify.cell", id=rid, kind="cholesky"):
+            pol = policies.get("mixed_f32bf16_t2") or PrecisionPolicy.tpu(2)
+            band, off = build_banded_covariance(
+                prob.locs, prob.theta, nb=prob.nb, policy=pol, nu_static=0.5,
+                jitter=1e-6)
+            t = min(pol.diag_thick, prob.p)
+            band, off = panel_cholesky_banded(band, off, pol)
+            l_panel = assemble_from_banded(band, off, t)
+            ll_panel = float(banded_loglik(band, off, prob.z, t))
         records.append(_chol_record(
-            f"chol/panel/mixed_f32bf16_t2/{prob.name}", prob, pol.mode,
-            dtype_pair(pol), pol.diag_thick,
+            rid, prob, pol.mode, dtype_pair(pol), pol.diag_thick,
             np.asarray(l_panel, np.float64), ll_panel))
 
         # --- DST tapering baseline ---------------------------------------
-        blocks = dst_cholesky(prob.cov, prob.nb, diag_thick=_DST_THICK)
-        l_dst = dst_assemble(blocks, prob.n)
-        ll_dst = float(dst_loglik(blocks, prob.z))
+        rid = f"chol/dst/t{_DST_THICK}/{prob.name}"
+        with obs.span("verify.cell", id=rid, kind="cholesky"):
+            blocks = dst_cholesky(prob.cov, prob.nb, diag_thick=_DST_THICK)
+            l_dst = dst_assemble(blocks, prob.n)
+            ll_dst = float(dst_loglik(blocks, prob.z))
         dst_pol = PrecisionPolicy.dst(_DST_THICK)
         records.append(_chol_record(
-            f"chol/dst/t{_DST_THICK}/{prob.name}", prob, "dst",
-            dtype_pair(dst_pol), _DST_THICK,
+            rid, prob, "dst", dtype_pair(dst_pol), _DST_THICK,
             np.asarray(l_dst, np.float64), ll_dst))
     return records
 
@@ -174,9 +179,11 @@ def sweep_kriging(problems=None, policies=None) -> list[dict]:
                                      nu_static=0.5)
         ref = exact_kriging_pmse(cov_oo, z_o, sigma_no, y)
         for label, pol in policies.items():
-            score = float(krige_pmse(locs_o, z_o, locs_n, y, prob.theta,
-                                     pol, nb=prob.nb, nu_static=0.5,
-                                     jitter=1e-6))
+            with obs.span("verify.cell", id=f"krige/{label}/{prob.name}",
+                          kind="kriging"):
+                score = float(krige_pmse(locs_o, z_o, locs_n, y, prob.theta,
+                                         pol, nb=prob.nb, nu_static=0.5,
+                                         jitter=1e-6))
             records.append({
                 "id": f"krige/{label}/{prob.name}",
                 "kind": "kriging",
@@ -237,52 +244,56 @@ def sweep_kernels() -> list[dict]:
         la = random_locations(jax.random.PRNGKey(11), m)
         lb = random_locations(jax.random.PRNGKey(12), n)
         for nu in (0.5, 1.5, 2.5):
-            theta = jnp.array([1.3, 0.12, nu])
-            out = matern_cov(la, lb, theta, nu=nu, bm=bm, bn=bn)
-            ref = matern_cov_ref(la, lb, theta, nu=nu)
-            records.append(_kernel_record(
-                f"kern/matern_cov/m{m}n{n}_nu{nu}", "matern_cov", out, ref))
+            rid = f"kern/matern_cov/m{m}n{n}_nu{nu}"
+            with obs.span("verify.cell", id=rid, kind="kernel"):
+                theta = jnp.array([1.3, 0.12, nu])
+                out = matern_cov(la, lb, theta, nu=nu, bm=bm, bn=bn)
+                ref = matern_cov_ref(la, lb, theta, nu=nu)
+            records.append(_kernel_record(rid, "matern_cov", out, ref))
 
     # mp_syrk: 3 shapes x 3 band widths (band width = precision regime)
     for m, k, bm, bk in ((128, 64, 64, 64), (256, 128, 64, 64),
                          (256, 64, 128, 64)):
         p = jax.random.normal(jax.random.PRNGKey(13), (m, k), jnp.float32)
         for band in (1, 2, 4):
-            out = mp_syrk(p, band_blocks=band, bm=bm, bk=bk)
-            ref = mp_syrk_ref(p, band_blocks=band, bm=bm, bk=bk)
-            records.append(_kernel_record(
-                f"kern/mp_syrk/m{m}k{k}_band{band}", "mp_syrk", out, ref))
+            rid = f"kern/mp_syrk/m{m}k{k}_band{band}"
+            with obs.span("verify.cell", id=rid, kind="kernel"):
+                out = mp_syrk(p, band_blocks=band, bm=bm, bk=bk)
+                ref = mp_syrk_ref(p, band_blocks=band, bm=bm, bk=bk)
+            records.append(_kernel_record(rid, "mp_syrk", out, ref))
 
     # blocked_potrf: 3 sizes x 3 condition numbers
     for n in (32, 64, 128):
         for cname, cond in CONDITIONS.items():
-            a = spd_matrix(17 + n, n, cond=cond)
-            out = potrf(a)
-            ref = potrf_ref(a)
+            rid = f"kern/blocked_potrf/n{n}_{cname}"
+            with obs.span("verify.cell", id=rid, kind="kernel"):
+                a = spd_matrix(17 + n, n, cond=cond)
+                out = potrf(a)
+                ref = potrf_ref(a)
             records.append(_kernel_record(
-                f"kern/blocked_potrf/n{n}_{cname}", "blocked_potrf",
-                out, ref, backward_rel=backward_error(out, a)))
+                rid, "blocked_potrf", out, ref,
+                backward_rel=backward_error(out, a)))
 
     # mp_attention: 3 cache shapes x 3 logit scales (softmax sharpness)
     for i, (b, g, d, sn, sf, blk) in enumerate(
             ((2, 4, 64, 128, 256, 128), (1, 8, 128, 256, 128, 64),
              (4, 1, 64, 128, 128, 128))):
         for scale in (0.5, 1.0, 2.0):
-            q, kn, vn, kf, vf = attention_problem(
-                21 + i, b, g, d, sn, sf, scale=scale)
-            kq, vq, scales = quantize_kv(kf, vf, blk=blk)
-            near_len = jnp.full((b,), sn, jnp.int32)
-            far_len = jnp.full((b,), sf, jnp.int32)
-            sm = 1.0 / float(np.sqrt(d))
-            out = banded_decode_attention(q, kn, vn, near_len, kq, vq,
-                                          scales, far_len, blk=blk,
-                                          sm_scale=sm)
-            ref = banded_decode_attention_ref(q, kn, vn, near_len, kq, vq,
+            rid = f"kern/mp_attention/shape{i}_scale{scale}"
+            with obs.span("verify.cell", id=rid, kind="kernel"):
+                q, kn, vn, kf, vf = attention_problem(
+                    21 + i, b, g, d, sn, sf, scale=scale)
+                kq, vq, scales = quantize_kv(kf, vf, blk=blk)
+                near_len = jnp.full((b,), sn, jnp.int32)
+                far_len = jnp.full((b,), sf, jnp.int32)
+                sm = 1.0 / float(np.sqrt(d))
+                out = banded_decode_attention(q, kn, vn, near_len, kq, vq,
                                               scales, far_len, blk=blk,
                                               sm_scale=sm)
-            rec = _kernel_record(
-                f"kern/mp_attention/shape{i}_scale{scale}", "mp_attention",
-                out, ref)
+                ref = banded_decode_attention_ref(q, kn, vn, near_len, kq, vq,
+                                                  scales, far_len, blk=blk,
+                                                  sm_scale=sm)
+            rec = _kernel_record(rid, "mp_attention", out, ref)
             rec.pop("max_rel")  # softmax outputs are O(1); abs is the metric
             records.append(rec)
     return records

@@ -389,3 +389,44 @@ def test_lint_gate_fails_on_seeded_tree(tmp_path, capsys):
     assert run_lint(bad_root) == 1
     assert main(["--lint-only", "--root", str(bad_root)]) == 1
     assert "no-implicit-downcast" in capsys.readouterr().out
+
+
+# ---- obs-span-context -----------------------------------------------------
+
+def test_context_managed_span_clean():
+    assert lint("with obs.span('a', x=1):\n    pass\n", RUNTIME) == []
+
+
+def test_context_managed_maybe_span_with_as_clean():
+    assert lint("with obs.maybe_span('a', arr) as sp:\n    pass\n",
+                RUNTIME) == []
+
+
+def test_bare_span_call_flagged():
+    fs = lint("obs.span('a', x=1)\n", RUNTIME)
+    assert rules(fs) == ["obs-span-context"]
+    assert "context-managed" in fs[0].message
+
+
+def test_span_assigned_to_variable_flagged():
+    assert rules(lint("sp = obs.maybe_span('a', arr)\n", RUNTIME)) \
+        == ["obs-span-context"]
+
+
+def test_enter_context_span_clean():
+    assert lint("sp = stack.enter_context(obs.span('a'))\n", RUNTIME) == []
+
+
+def test_span_rule_exempt_in_obs_package():
+    assert lint("def span(name):\n    return _R.span(name)\n",
+                "repro/obs/fixture.py") == []
+
+
+def test_span_pragma_suppresses():
+    src = "obs.span('a')  # repro: disable=obs-span-context -- test\n"
+    assert lint(src, RUNTIME) == []
+
+
+def test_variable_named_span_not_flagged():
+    # a local named `span` that is never *called* is not a telemetry leak
+    assert lint("span = (hi - lo) * 0.4\n", RUNTIME) == []
