@@ -1,0 +1,49 @@
+"""Concurrency soundness layer (DESIGN.md §14).
+
+Third analysis layer next to the precision-flow linter (`analysis.lint`)
+and the tile-DAG hazard checker (`analysis.dag`), aimed at the dynamic
+task runtime (`repro.sched`) and the telemetry recorder (`repro.obs`):
+
+  * `hb`         -- vector-clock happens-before model over recorded
+    traces: every task must start after all of its dependencies end,
+    CONVERTs must happen-before their cross-tier consumers, and any two
+    writes to the same tile slot must be HB-ordered;
+  * `lockguard`  -- AST lockset linter enforcing the
+    ``# repro: guarded-by=<lock>`` annotation registry, wait-in-a-loop
+    condition-variable discipline, and no-JAX-dispatch-under-the-
+    scheduler-lock;
+  * `interleave` -- deterministic interleaving model checker: the
+    executor's worker loop re-run under a step-controlled cooperative
+    stepper across seeded-random and adversarial schedules, asserting
+    write-once discipline and bitwise equality with sequential replay.
+
+All three are wired into ``python -m repro.analysis --check
+--concurrency`` and the blocking static-analysis CI job.
+"""
+
+from .hb import HBReport, HBViolation, verify_sched_report, verify_trace
+from .interleave import (
+    InterleaveViolation,
+    MatrixReport,
+    RunResult,
+    SCHEDULES,
+    explore,
+    run_matrix,
+)
+from .lockguard import LOCKGUARD_RULES, lockguard_files, lockguard_source
+
+__all__ = [
+    "HBReport",
+    "HBViolation",
+    "InterleaveViolation",
+    "LOCKGUARD_RULES",
+    "MatrixReport",
+    "RunResult",
+    "SCHEDULES",
+    "explore",
+    "lockguard_files",
+    "lockguard_source",
+    "run_matrix",
+    "verify_sched_report",
+    "verify_trace",
+]

@@ -1,0 +1,363 @@
+"""Interleaving model checker: the executor's worker loop, step-controlled.
+
+`sched.runtime.execute` lets the OS scheduler pick which worker acquires
+the lock next, so any single threaded run exercises ONE interleaving out
+of exponentially many.  This module re-runs the same logical worker loop
+under a deterministic cooperative stepper: each logical worker is a
+three-phase state machine mirroring the real executor's critical
+sections --
+
+    pop      (lock held)   pop the best ready task, record dispatch,
+                           fetch operand values;
+    compute  (lock free)   run the per-tile kernel on the fetched values;
+    publish  (lock held)   store the output write-once, decrement
+                           successor dependency counts, wake the queue --
+
+and a schedule strategy chooses which runnable worker advances at every
+step.  Because the stepper controls the interleaving exactly, a run is
+reproducible from (`SchedConfig.seed`, schedule name, salt) alone, and
+adversarial schedules can force the orderings a stress test only hits by
+luck:
+
+    random            seeded uniform choice among runnable workers;
+    reverse_priority  always advance the worker holding the WORST
+                      priority-key task (delays critical-path publishes);
+    convert_last      starve workers executing CONVERT tasks (stresses
+                      cross-tier consumers waiting on dlag2s/sconv2d);
+    starve0           worker 0 only advances when it is the sole runnable
+                      worker (models an arbitrarily slow OS thread).
+
+Every run asserts the runtime's two safety invariants at the exact point
+the real executor relies on them -- operands are present when fetched
+(no use-before-publish) and every value slot is written exactly once --
+and every completed run must reproduce the in-order sequential replay of
+the same kernels bitwise (for the tile variant, additionally the
+sequential engine itself).  `run_matrix` sweeps the
+(variant x policy x p) conformance matrix and counts DISTINCT explored
+interleavings by step signature; the CLI gate requires >= 200 of them,
+all clean.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import random
+
+import numpy as np
+
+from ...sched.config import SchedConfig
+from ...sched.runtime import TaskGraph, build_graph, priority_keys
+
+SCHEDULES = ("random", "reverse_priority", "convert_last", "starve0")
+
+_POP, _COMPUTE, _PUBLISH = "pop", "compute", "publish"
+
+
+class InterleaveViolation(AssertionError):
+    """A runtime safety invariant broke under an explored interleaving."""
+
+
+@dataclasses.dataclass
+class _Worker:
+    wid: int
+    phase: str = _POP          # _POP (idle) | _COMPUTE | _PUBLISH
+    task: int = -1
+    ops: list | None = None
+    out: object = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RunResult:
+    schedule: str
+    seed: int
+    salt: int
+    workers: int
+    signature: tuple          # ((wid, action, task), ...) -- the interleaving
+    dispatch: tuple[int, ...]
+    values: tuple             # per-task outputs, emission-indexed
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.signature)
+
+
+def _fetch(graph: TaskGraph, kernels, values: list, idx: int) -> list:
+    """Operand fetch with the use-before-publish check the real executor
+    relies on the ready queue to make unnecessary."""
+    task = graph.tasks[idx]
+    reads = task.reads if task.kind != "CONVERT" else (task.target,)
+    if len(reads) != len(graph.deps[idx]):
+        raise InterleaveViolation(
+            f"operand arity mismatch: task #{idx} {task} reads "
+            f"{len(reads)} operands but carries {len(graph.deps[idx])} "
+            "dependency slots (truncated dependency row?)")
+    ops = []
+    for r, producer in zip(reads, graph.deps[idx]):
+        if producer >= 0:
+            v = values[producer]
+            if v is None:
+                raise InterleaveViolation(
+                    f"use-before-publish: task #{idx} {task} fetched "
+                    f"operand {r} from unpublished producer #{producer} "
+                    f"{graph.tasks[producer]}")
+            ops.append(v)
+        else:
+            ops.append(kernels.initial(r))
+    return ops
+
+
+def explore(graph: TaskGraph, kernels, config: SchedConfig, *,
+            schedule: str = "random", salt: int = 0) -> RunResult:
+    """Run one complete interleaving of `graph` under `schedule`.
+
+    Raises InterleaveViolation on a use-before-publish, double-publish,
+    or scheduler deadlock.  Deterministic: the schedule RNG is seeded
+    from (config.seed, schedule, salt) only.
+    """
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; one of {SCHEDULES}")
+    keys = priority_keys(graph, config)
+    # NB: no hash() here -- str hashing is per-process randomized and would
+    # break reproducibility-from-config
+    rng = random.Random((config.seed * 0x9E3779B1 + salt) * len(SCHEDULES)
+                        + SCHEDULES.index(schedule))
+    n = graph.n
+    ndeps = graph.indegree()
+    ready = [keys[i] for i in range(n) if ndeps[i] == 0]
+    heapq.heapify(ready)
+    values: list = [None] * n
+    done = 0
+    dispatch: list[int] = []
+    steps: list[tuple[int, str, int]] = []
+    workers = [_Worker(w) for w in range(config.workers)]
+
+    def task_key(w: _Worker):
+        """Priority key of the task this worker's next step concerns."""
+        if w.phase == _POP:
+            return ready[0]          # the task a pop would take
+        return keys[w.task]
+
+    def runnable() -> list[_Worker]:
+        return [w for w in workers
+                if w.phase != _POP or (ready and done < n)]
+
+    def pick(cands: list[_Worker]) -> _Worker:
+        if schedule == "random":
+            return cands[rng.randrange(len(cands))]
+        if schedule == "reverse_priority":
+            return max(cands, key=lambda w: (task_key(w), w.wid))
+        if schedule == "convert_last":
+            def is_convert(w):
+                idx = ready[0][-1] if w.phase == _POP else w.task
+                return graph.tasks[idx].kind == "CONVERT"
+            return min(cands, key=lambda w: (is_convert(w), w.wid))
+        # starve0: worker 0 advances only as the sole runnable worker
+        rest = [w for w in cands if w.wid != 0]
+        return min(rest or cands, key=lambda w: w.wid)
+
+    guard = 0
+    while done < n:
+        cands = runnable()
+        if not cands:
+            raise InterleaveViolation(
+                f"deadlock: {done}/{n} tasks done, ready queue empty, "
+                "no worker in flight (cyclic or truncated dependencies)")
+        w = pick(cands)
+        if w.phase == _POP:
+            key = heapq.heappop(ready)
+            idx = key[-1] if len(key) > 1 else key[0]
+            w.task = idx
+            dispatch.append(idx)
+            w.ops = _fetch(graph, kernels, values, idx)
+            w.phase = _COMPUTE
+            steps.append((w.wid, _POP, idx))
+        elif w.phase == _COMPUTE:
+            out = kernels.run(graph.tasks[w.task], w.ops)
+            if hasattr(out, "block_until_ready"):
+                out.block_until_ready()
+            w.out = out
+            w.ops = None
+            w.phase = _PUBLISH
+            steps.append((w.wid, _COMPUTE, w.task))
+        else:
+            idx = w.task
+            if values[idx] is not None:
+                raise InterleaveViolation(
+                    f"write-once violation: task #{idx} "
+                    f"{graph.tasks[idx]} published twice")
+            values[idx] = w.out
+            w.out = None
+            done += 1
+            for s in graph.succs[idx]:
+                ndeps[s] -= 1
+                if ndeps[s] == 0:
+                    heapq.heappush(ready, keys[s])
+                elif ndeps[s] < 0:
+                    raise InterleaveViolation(
+                        f"dependency count of task #{s} went negative "
+                        f"(double publish of a producer?)")
+            w.phase = _POP
+            w.task = -1
+            steps.append((w.wid, _PUBLISH, idx))
+        guard += 1
+        if guard > 3 * n * max(config.workers, 1) + 16:
+            raise InterleaveViolation(
+                f"stepper did not terminate after {guard} steps "
+                f"({done}/{n} tasks done)")
+
+    return RunResult(schedule=schedule, seed=config.seed, salt=salt,
+                     workers=config.workers, signature=tuple(steps),
+                     dispatch=tuple(dispatch), values=tuple(values))
+
+
+def replay_inorder(graph: TaskGraph, kernels) -> tuple:
+    """Sequential reference: execute the task stream in emission order."""
+    values: list = [None] * graph.n
+    for idx in range(graph.n):
+        out = kernels.run(graph.tasks[idx],
+                          _fetch(graph, kernels, values, idx))
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        values[idx] = out
+    return tuple(values)
+
+
+def bitwise_equal(a, b) -> bool:
+    na, nb = np.asarray(a), np.asarray(b)
+    return na.dtype == nb.dtype and na.shape == nb.shape \
+        and na.tobytes() == nb.tobytes()
+
+
+def values_bitwise_equal(got: tuple, want: tuple) -> list[int]:
+    """Indices of tasks whose outputs differ bitwise (empty = equal)."""
+    return [i for i, (g, w) in enumerate(zip(got, want))
+            if not bitwise_equal(g, w)]
+
+
+# ---------------------------------------------------------------------------
+# the (variant x policy x p) matrix sweep
+# ---------------------------------------------------------------------------
+
+#: fast subset: enough concurrency per cell for schedules to diverge, small
+#: enough that the CLI gate stays interactive.  The slow pytest `concurrency`
+#: marker runs the full matrix (tests/test_concurrency_interleave.py).
+FAST_CELLS = (
+    ("tile", "full", 3), ("tile", "full", 4),
+    ("tile", "mixed", 3), ("tile", "mixed", 4),
+    ("tile", "three_tier", 4),
+    ("panel", "mixed", 4),
+    ("dst", "mixed", 4),
+)
+
+
+def _policies():
+    from ...core.precision import PrecisionPolicy
+    return {
+        "full": PrecisionPolicy.full(),
+        "mixed": PrecisionPolicy.tpu(2),
+        "three_tier": PrecisionPolicy.three_tier(1, 3),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixReport:
+    rows: tuple                  # per-(cell, workers) summary dicts
+    n_runs: int
+    n_distinct: int              # distinct interleaving signatures, summed
+    violations: tuple[str, ...]  # stepper invariant failures
+    mismatches: tuple[str, ...]  # bitwise differences vs sequential replay
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations and not self.mismatches
+
+    def render(self) -> str:
+        lines = [(f"interleave: {self.n_runs} runs, {self.n_distinct} "
+                  f"distinct interleavings, {len(self.violations)} "
+                  f"violations, {len(self.mismatches)} bitwise mismatches")]
+        for r in self.rows:
+            lines.append(
+                f"  {r['variant']}/{r['policy']} p={r['p']} W={r['workers']}: "
+                f"{r['runs']} runs, {r['distinct']} distinct")
+        lines += [f"  VIOLATION: {v}" for v in self.violations]
+        lines += [f"  MISMATCH: {m}" for m in self.mismatches]
+        return "\n".join(lines)
+
+
+def run_matrix(cells=FAST_CELLS, *, nb: int = 4, seeds: int = 12,
+               workers=(2, 3), priority: str = "critical_path",
+               base_seed: int = 1) -> MatrixReport:
+    """Explore seeded-random + adversarial schedules over `cells`.
+
+    Per (cell, worker count): every adversarial schedule once plus `seeds`
+    seeded-random runs, each checked for stepper invariants and bitwise
+    equality with the in-order sequential replay (tile cells additionally
+    against `core.tile_cholesky` itself).  Distinctness is counted on the
+    full step signature within each (cell, workers) group.
+    """
+    from ...core.tile_cholesky import assemble_lower, tile_cholesky
+    from ...sched.kernels import make_kernels
+    from ...verify.generators import spd_matrix
+
+    policies = _policies()
+    rows = []
+    violations: list[str] = []
+    mismatches: list[str] = []
+    n_runs = n_distinct = 0
+
+    for variant, plabel, p in cells:
+        policy = policies[plabel]
+        graph = build_graph(variant, p, policy)
+        a = spd_matrix(p * 7 + nb, p * nb, cond=50.0)
+        kernels = make_kernels(variant, a, nb, policy)
+        reference = replay_inorder(graph, kernels)
+        engine = None
+        if variant == "tile":
+            engine = np.asarray(tile_cholesky(a, nb, policy))
+        for nw in workers:
+            signatures = set()
+            runs_here = 0
+            for schedule in SCHEDULES:
+                salts = range(seeds) if schedule == "random" else range(1)
+                for salt in salts:
+                    config = SchedConfig(priority=priority, workers=nw,
+                                         backend="sim",
+                                         seed=base_seed + salt)
+                    label = (f"{variant}/{plabel} p={p} W={nw} "
+                             f"{schedule}#{salt}")
+                    try:
+                        res = explore(graph, kernels, config,
+                                      schedule=schedule, salt=salt)
+                    except InterleaveViolation as e:
+                        violations.append(f"{label}: {e}")
+                        continue
+                    finally:
+                        runs_here += 1
+                    signatures.add(res.signature)
+                    bad = values_bitwise_equal(res.values, reference)
+                    if bad:
+                        mismatches.append(
+                            f"{label}: tasks {bad[:6]} differ from "
+                            "sequential replay")
+                    elif engine is not None:
+                        store = dict(kernels.initial_store())
+                        for idx, task in enumerate(graph.tasks):
+                            if task.kind != "CONVERT":
+                                store[task.target] = res.values[idx]
+                        got = np.asarray(assemble_lower(
+                            store, p, nb, policy.hi))
+                        if got.tobytes() != engine.tobytes():
+                            mismatches.append(
+                                f"{label}: assembled factor differs from "
+                                "core.tile_cholesky")
+            rows.append({"variant": variant, "policy": plabel, "p": p,
+                         "workers": nw, "runs": runs_here,
+                         "distinct": len(signatures)})
+            n_runs += runs_here
+            n_distinct += len(signatures)
+
+    return MatrixReport(rows=tuple(rows), n_runs=n_runs,
+                        n_distinct=n_distinct,
+                        violations=tuple(violations),
+                        mismatches=tuple(mismatches))

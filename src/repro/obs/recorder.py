@@ -155,15 +155,20 @@ class Recorder:
     threads and the host MLE loop can write concurrently.  Span nesting
     depth is tracked per thread in a `threading.local`, outside the lock
     (each thread only touches its own stack).
+
+    The ``# repro: guarded-by=_lock`` annotations are machine-checked by
+    `analysis.concurrency.lockguard`: mutating an annotated attribute
+    outside a ``with self._lock:`` block (or a ``*_locked`` method, whose
+    contract is lock-held-by-caller) is a lint finding.
     """
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._tls = threading.local()
-        self.counters: dict[str, float] = {}
-        self.gauges: dict[str, float] = {}
-        self.histograms: dict[str, Histogram] = {}
-        self.spans: list[SpanRecord] = []
+        self._tls = threading.local()   # per-thread span stack: lock-free
+        self.counters: dict[str, float] = {}      # repro: guarded-by=_lock
+        self.gauges: dict[str, float] = {}        # repro: guarded-by=_lock
+        self.histograms: dict[str, Histogram] = {}  # repro: guarded-by=_lock
+        self.spans: list[SpanRecord] = []         # repro: guarded-by=_lock
 
     # ---- span plumbing (thread-local, lock-free) -----------------------
     def _push(self) -> int:

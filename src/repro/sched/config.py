@@ -36,8 +36,21 @@ class SchedConfig:
                                       # launch/calibration.json table
                                       # (python -m repro.obs calibrate)
                                       # instead of analytic MXU weights
+    seed: int = 0                     # deterministic tie-breaking seed:
+                                      # 0 = emission-order ties (the
+                                      # historical order); any other value
+                                      # permutes equal-priority ties with a
+                                      # seeded shuffle, and the interleaving
+                                      # explorer (analysis.concurrency)
+                                      # derives its schedule RNG from it --
+                                      # a run is reproducible from the
+                                      # config alone
 
     def __post_init__(self):
+        if not isinstance(self.seed, int) or isinstance(self.seed, bool) \
+                or self.seed < 0:
+            raise ValueError(
+                f"seed must be a non-negative int, got {self.seed!r}")
         if not isinstance(self.calibrated, bool):
             raise ValueError(
                 f"calibrated must be a bool, got {self.calibrated!r}")

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import random
 import threading
 import time
 
@@ -95,17 +96,38 @@ def downstream_cost(graph: TaskGraph, config: SchedConfig) -> list[float]:
     return down
 
 
+def _tie_order(graph: TaskGraph, config: SchedConfig) -> list[int]:
+    """Per-task tie-break rank: emission order, or a seeded permutation.
+
+    `config.seed == 0` keeps the historical behavior (ties pop in emission
+    order).  Any other seed shuffles the rank deterministically, so runs
+    that differ only in equal-priority tie-breaking are reproducible from
+    the config alone -- the knob the interleaving explorer
+    (`analysis.concurrency.interleave`) turns to diversify schedules.
+    """
+    if config.seed == 0:
+        return list(range(graph.n))
+    order = list(range(graph.n))
+    random.Random(config.seed).shuffle(order)
+    rank = [0] * graph.n
+    for r, idx in enumerate(order):
+        rank[idx] = r
+    return rank
+
+
 def priority_keys(graph: TaskGraph, config: SchedConfig) -> list[tuple]:
     """Total-order ready-queue key per task (smaller pops first)."""
     if config.priority == "fifo":
+        # fifo IS the emission order -- there are no ties for a seed to break
         return [(idx,) for idx in range(graph.n)]
+    tie = _tie_order(graph, config)
     if config.priority == "panel_first":
         # right-looking lookahead: later panels outrank earlier trailing
         # updates, and within a step the factor ops outrank the updates
-        return [(t.k, _KIND_RANK[t.kind], idx)
+        return [(t.k, _KIND_RANK[t.kind], tie[idx], idx)
                 for idx, t in enumerate(graph.tasks)]
     down = downstream_cost(graph, config)
-    return [(-down[idx], idx) for idx in range(graph.n)]
+    return [(-down[idx], tie[idx], idx) for idx in range(graph.n)]
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +145,14 @@ class TaskEvent:
     worker: int
     start: float       # sim: virtual units; real: microseconds since t0
     end: float
+    worker_name: str = ""   # real backend: the OS thread's name; sim: sim-w<N>
+
+
+def policy_desc(policy) -> tuple:
+    """(mode, diag_thick, diag_thick2) -- enough to rebuild the symbolic
+    task graph (storage tiers ignore dtypes), carried through trace files
+    so `analysis.concurrency.hb` can verify an artifact standalone."""
+    return (policy.mode, int(policy.diag_thick), int(policy.diag_thick2))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +166,8 @@ class SchedReport:
     worker_busy: tuple[float, ...]
     dispatch_order: tuple[int, ...]
     events: tuple[TaskEvent, ...]
+    p: int = 0                         # tile-grid size (0 = unknown/legacy)
+    policy: tuple = ()                 # policy_desc(...) of the graph's policy
 
     @property
     def utilization(self) -> float:
@@ -207,7 +239,8 @@ def _simulate(graph: TaskGraph, config: SchedConfig) -> SchedReport:
             task = graph.tasks[idx]
             events.append(TaskEvent(
                 index=idx, name=str(task), kind=task.kind, tier=task.tier,
-                k=task.k, worker=w, start=t, end=end))
+                k=task.k, worker=w, start=t, end=end,
+                worker_name=f"sim-w{w}"))
             busy[w] += costs[idx]
         if not running:
             raise RuntimeError("scheduler deadlock: no ready task and no "
@@ -225,7 +258,7 @@ def _simulate(graph: TaskGraph, config: SchedConfig) -> SchedReport:
         backend="sim", variant=graph.variant, priority=config.priority,
         workers=config.workers, n_tasks=graph.n, makespan=t,
         worker_busy=tuple(busy), dispatch_order=tuple(dispatch),
-        events=tuple(events))
+        events=tuple(events), p=graph.p, policy=policy_desc(graph.policy))
 
 
 # ---------------------------------------------------------------------------
@@ -233,19 +266,26 @@ def _simulate(graph: TaskGraph, config: SchedConfig) -> SchedReport:
 # ---------------------------------------------------------------------------
 
 class _ExecState:
-    """Shared mutable state behind one lock; values are write-once."""
+    """Shared mutable state behind one lock; values are write-once.
+
+    The ``# repro: guarded-by=cond`` annotations below are machine-checked
+    by `analysis.concurrency.lockguard`: any mutation of an annotated
+    attribute outside a ``with <state>.cond:`` block is a lint finding.
+    `graph` and `keys` are immutable after construction and deliberately
+    unannotated.
+    """
 
     def __init__(self, graph: TaskGraph, keys: list[tuple]):
         self.graph = graph
         self.keys = keys
-        self.ndeps = graph.indegree()
-        self.ready = [keys[i] for i in range(graph.n) if self.ndeps[i] == 0]
+        self.ndeps = graph.indegree()                 # repro: guarded-by=cond
+        self.ready = [keys[i] for i in range(graph.n) if self.ndeps[i] == 0]  # repro: guarded-by=cond
         heapq.heapify(self.ready)
-        self.values: list = [None] * graph.n
-        self.done = 0
-        self.dispatch: list[int] = []
-        self.events: list[TaskEvent] = []
-        self.error: BaseException | None = None
+        self.values: list = [None] * graph.n          # repro: guarded-by=cond
+        self.done = 0                                 # repro: guarded-by=cond
+        self.dispatch: list[int] = []                 # repro: guarded-by=cond
+        self.events: list[TaskEvent] = []             # repro: guarded-by=cond
+        self.error: BaseException | None = None       # repro: guarded-by=cond
         self.lock = threading.Lock()
         self.cond = threading.Condition(self.lock)
 
@@ -319,14 +359,16 @@ def execute(graph: TaskGraph, config: SchedConfig, kernels) -> tuple[dict, Sched
                 state.events.append(TaskEvent(
                     index=idx, name=str(task), kind=task.kind,
                     tier=task.tier, k=task.k, worker=w,
-                    start=(start - t0) * 1e6, end=(end - t0) * 1e6))
+                    start=(start - t0) * 1e6, end=(end - t0) * 1e6,
+                    worker_name=threading.current_thread().name))
                 for s in graph.succs[idx]:
                     state.ndeps[s] -= 1
                     if state.ndeps[s] == 0:
                         heapq.heappush(state.ready, keys[s])
                 state.cond.notify_all()
 
-    threads = [threading.Thread(target=worker, args=(w,), daemon=True)
+    threads = [threading.Thread(target=worker, args=(w,), daemon=True,
+                                name=f"sched-w{w}")
                for w in range(config.workers)]
     for th in threads:
         th.start()
@@ -348,7 +390,8 @@ def execute(graph: TaskGraph, config: SchedConfig, kernels) -> tuple[dict, Sched
         backend="real", variant=graph.variant, priority=config.priority,
         workers=config.workers, n_tasks=n, makespan=makespan,
         worker_busy=tuple(busy), dispatch_order=tuple(state.dispatch),
-        events=tuple(state.events))
+        events=tuple(state.events), p=graph.p,
+        policy=policy_desc(graph.policy))
     return store, report
 
 

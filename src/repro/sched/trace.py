@@ -27,8 +27,19 @@ if TYPE_CHECKING:                      # pragma: no cover - typing only
 _REQUIRED_KEYS = ("name", "ph", "ts", "dur", "pid", "tid")
 
 
+def worker_names(report: "SchedReport") -> dict[int, str]:
+    """Per-worker display name: the real OS thread name when the executor
+    recorded one (`TaskEvent.worker_name`), else the legacy worker<N>."""
+    names = {w: f"worker{w}" for w in range(report.workers)}
+    for ev in report.events:
+        if getattr(ev, "worker_name", ""):
+            names[ev.worker] = ev.worker_name
+    return names
+
+
 def chrome_trace(report: "SchedReport") -> dict:
     """Render a report as a Chrome trace_event JSON object."""
+    names = worker_names(report)
     events: list[dict] = [{
         "name": "process_name", "ph": "M", "pid": 0, "tid": 0,
         "args": {"name": f"repro.sched {report.backend} "
@@ -36,7 +47,7 @@ def chrome_trace(report: "SchedReport") -> dict:
     }]
     for w in range(report.workers):
         events.append({"name": "thread_name", "ph": "M", "pid": 0, "tid": w,
-                       "args": {"name": f"worker{w}"}})
+                       "args": {"name": names[w]}})
     for ev in report.events:
         events.append({
             "name": f"{ev.kind}@k={ev.k}",
@@ -47,21 +58,29 @@ def chrome_trace(report: "SchedReport") -> dict:
             "pid": 0,
             "tid": ev.worker,
             "args": {"task": ev.name, "kind": ev.kind, "tier": ev.tier,
-                     "k": ev.k, "index": ev.index},
+                     "k": ev.k, "index": ev.index,
+                     "worker": names[ev.worker]},
         })
+    other = {
+        "backend": report.backend,
+        "variant": report.variant,
+        "priority": report.priority,
+        "workers": report.workers,
+        "n_tasks": report.n_tasks,
+        "makespan": report.makespan,
+        "utilization": report.utilization,
+        "overlap_fraction": report.overlap_fraction,
+    }
+    # graph identity (PR 10): enough to rebuild the symbolic DAG so the
+    # happens-before verifier can check a trace artifact standalone
+    if getattr(report, "p", 0):
+        other["p"] = report.p
+        mode, d1, d2 = report.policy
+        other["policy"] = {"mode": mode, "diag_thick": d1, "diag_thick2": d2}
     return {
         "traceEvents": events,
         "displayTimeUnit": "ms",
-        "otherData": {
-            "backend": report.backend,
-            "variant": report.variant,
-            "priority": report.priority,
-            "workers": report.workers,
-            "n_tasks": report.n_tasks,
-            "makespan": report.makespan,
-            "utilization": report.utilization,
-            "overlap_fraction": report.overlap_fraction,
-        },
+        "otherData": other,
     }
 
 
@@ -75,7 +94,9 @@ def validate_trace(trace: dict) -> None:
 
     Checks: top-level shape, required keys on every complete event,
     non-negative timestamps/durations, and -- per worker track -- strictly
-    monotone, non-overlapping task intervals.
+    monotone, non-overlapping task intervals.  Tracks may be keyed by a
+    numeric tid or by a thread-name string (the named variant the real
+    executor emits); anything else is malformed.
     """
     if not isinstance(trace, dict) or "traceEvents" not in trace:
         raise ValueError("trace must be a dict with a traceEvents list")
@@ -99,6 +120,9 @@ def validate_trace(trace: dict) -> None:
             raise ValueError(f"non-finite/negative ts in {ev!r}")
         if not (isinstance(dur, (int, float)) and dur >= 0):
             raise ValueError(f"non-finite/negative dur in {ev!r}")
+        if not isinstance(ev["tid"], (int, str)) or isinstance(ev["tid"], bool):
+            raise ValueError(f"tid must be an int or a thread-name string, "
+                             f"got {ev['tid']!r} in {ev!r}")
         per_track.setdefault((ev["pid"], ev["tid"]), []).append(
             (ts, ts + dur, str(ev["name"])))
     if not per_track:
@@ -129,11 +153,12 @@ def summary_rows(report: "SchedReport") -> list[dict]:
         evs = by_tier[tier]
         rows.append({"scope": "tier", "name": tier, "tasks": len(evs),
                      "busy": sum(e.end - e.start for e in evs)})
+    names = worker_names(report)
     for w, busy in enumerate(report.worker_busy):
         n = sum(1 for e in report.events if e.worker == w)
         util = busy / report.makespan if report.makespan > 0 else 1.0
         idle = max(report.makespan - busy, 0.0)
-        rows.append({"scope": "worker", "name": f"worker{w}", "tasks": n,
+        rows.append({"scope": "worker", "name": names[w], "tasks": n,
                      "busy": busy, "util": util, "idle": idle,
                      "idle_frac": 1.0 - util})
     return rows

@@ -430,3 +430,49 @@ def test_span_pragma_suppresses():
 def test_variable_named_span_not_flagged():
     # a local named `span` that is never *called* is not a telemetry leak
     assert lint("span = (hi - lo) * 0.4\n", RUNTIME) == []
+
+
+# ---- stale-baseline gate (PR 10) ------------------------------------------
+
+def _stale_entry(rule="no-implicit-downcast"):
+    return {"rule": rule, "path": "repro/x/gone.py",
+            "code": "x = a.astype(jnp.bfloat16)", "reason": "legacy"}
+
+
+def test_stale_baseline_entry_fails_check(monkeypatch, capsys):
+    from repro.analysis import cli
+
+    monkeypatch.setattr(cli, "load_baseline",
+                        lambda: load_baseline() + [_stale_entry()])
+    assert cli.run_lint(SRC_ROOT) == 1
+    out = capsys.readouterr().out
+    assert "STALE BASELINE" in out and "gone.py" in out
+
+
+def test_allow_stale_baseline_downgrades_to_note(monkeypatch, capsys):
+    from repro.analysis import cli
+
+    monkeypatch.setattr(cli, "load_baseline",
+                        lambda: load_baseline() + [_stale_entry()])
+    assert cli.run_lint(SRC_ROOT, allow_stale=True) == 0
+    out = capsys.readouterr().out
+    assert "note" in out and "STALE BASELINE" not in out
+
+
+def test_inactive_rule_entries_never_stale(monkeypatch):
+    """A lockguard-rule entry is not stale in a lint-only run (the rule
+    didn't execute), but IS stale once --concurrency runs it."""
+    from repro.analysis import cli
+
+    monkeypatch.setattr(
+        cli, "load_baseline",
+        lambda: load_baseline() + [_stale_entry(rule="guarded-by")])
+    assert cli.run_lint(SRC_ROOT) == 0                      # rule inactive
+    assert cli.run_lint(SRC_ROOT, concurrency=True) == 1    # rule active
+
+
+def test_concurrency_only_cli_flags(capsys):
+    assert main(["--concurrency-only", "--verbose"]) == 0
+    out = capsys.readouterr().out
+    assert "hb:" in out and "interleave:" in out
+    assert "static analysis: OK" in out

@@ -1,0 +1,342 @@
+"""Lock-discipline linter (repro.analysis.concurrency.lockguard).
+
+Each rule gets a bad/good snippet pair; the repo's annotated sources at
+HEAD must be clean; and a seeded mutant of the real executor (one
+``with state.cond:`` removed) must be caught -- the meta-property the CI
+gate relies on.
+"""
+
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.concurrency.lockguard import (
+    LOCKGUARD_FILES,
+    LOCKGUARD_RULES,
+    guarded_registry,
+    lockguard_files,
+    lockguard_source,
+)
+from repro.analysis.cli import SRC_ROOT
+
+
+def lint(src: str):
+    return lockguard_source(textwrap.dedent(src), "repro/fixture.py")
+
+
+def rules(findings):
+    return [f.rule for f in findings]
+
+
+GUARDED = """
+import threading
+
+class S:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.items = []        # repro: guarded-by=lock
+        self.count = 0         # repro: guarded-by=lock
+"""
+
+
+# ---- registry -------------------------------------------------------------
+
+def test_registry_extracted_from_annotations():
+    reg = guarded_registry(textwrap.dedent(GUARDED))
+    assert reg == {"items": "lock", "count": "lock"}
+
+
+def test_registry_empty_without_annotations():
+    assert guarded_registry("x = 1\n") == {}
+
+
+# ---- guarded-by -----------------------------------------------------------
+
+def test_unguarded_append_flagged():
+    fs = lint(GUARDED + """
+    def add(self, x):
+        self.items.append(x)
+""")
+    assert rules(fs) == ["guarded-by"]
+    assert "items" in fs[0].message
+
+
+def test_unguarded_assignment_flagged():
+    fs = lint(GUARDED + """
+    def bump(self):
+        self.count += 1
+""")
+    assert rules(fs) == ["guarded-by"]
+
+
+def test_unguarded_subscript_flagged():
+    fs = lint(GUARDED + """
+    def set(self, i, v):
+        self.items[i] = v
+""")
+    assert rules(fs) == ["guarded-by"]
+
+
+def test_unguarded_heappush_flagged():
+    fs = lint("import heapq\n" + GUARDED + """
+    def push(self, x):
+        heapq.heappush(self.items, x)
+""")
+    assert rules(fs) == ["guarded-by"]
+
+
+def test_guarded_mutation_clean():
+    assert lint(GUARDED + """
+    def add(self, x):
+        with self.lock:
+            self.items.append(x)
+            self.count += 1
+""") == []
+
+
+def test_init_exempt():
+    """Construction happens-before publication: __init__ needs no lock."""
+    assert lint(GUARDED) == []
+
+
+def test_locked_helper_exempt_but_call_site_checked():
+    src = GUARDED + """
+    def _add_locked(self, x):
+        self.items.append(x)
+
+    def good(self, x):
+        with self.lock:
+            self._add_locked(x)
+
+    def bad(self, x):
+        self._add_locked(x)
+"""
+    fs = lint(src)
+    assert rules(fs) == ["guarded-by"]
+    assert "_add_locked" in fs[0].message
+
+
+def test_condition_guards_cond_annotated_attrs():
+    """`with state.cond:` satisfies guarded-by=cond (Condition over lock)."""
+    assert lint("""
+import threading
+
+class St:
+    def __init__(self):
+        self.cond = threading.Condition()
+        self.q = []    # repro: guarded-by=cond
+
+def worker(state):
+    with state.cond:
+        state.q.append(1)
+""") == []
+
+
+def test_pragma_suppresses():
+    fs = lint(GUARDED + """
+    def add(self, x):
+        self.items.append(x)  # repro: disable=guarded-by -- test fixture
+""")
+    assert fs == []
+
+
+# ---- cv-wait-loop ---------------------------------------------------------
+
+def test_if_guarded_wait_flagged():
+    fs = lint("""
+import threading
+
+class S:
+    def __init__(self):
+        self.cond = threading.Condition()
+        self.q = []    # repro: guarded-by=cond
+
+    def get(self):
+        with self.cond:
+            if not self.q:
+                self.cond.wait()
+            return self.q.pop()  # repro: disable=guarded-by -- fixture
+""")
+    assert rules(fs) == ["cv-wait-loop"]
+
+
+def test_while_guarded_wait_clean():
+    assert lint("""
+import threading
+
+class S:
+    def __init__(self):
+        self.cond = threading.Condition()
+        self.q = []    # repro: guarded-by=cond
+
+    def get(self):
+        with self.cond:
+            while not self.q:
+                self.cond.wait()
+""") == []
+
+
+def test_wait_for_clean():
+    """Condition.wait_for re-checks its predicate internally."""
+    assert lint("""
+import threading
+
+class S:
+    def __init__(self):
+        self.cond = threading.Condition()
+        self.q = []    # repro: guarded-by=cond
+
+    def get(self):
+        with self.cond:
+            self.cond.wait_for(lambda: self.q)
+""") == []
+
+
+# ---- lock-dispatch --------------------------------------------------------
+
+def test_jnp_call_under_lock_flagged():
+    fs = lint("""
+import threading
+import jax.numpy as jnp
+
+class S:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.out = []    # repro: guarded-by=lock
+
+    def work(self, x):
+        with self.lock:
+            self.out.append(jnp.tril(x))
+""")
+    assert rules(fs) == ["lock-dispatch"]
+
+
+def test_block_until_ready_under_lock_flagged():
+    fs = lint("""
+import threading
+
+class S:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.out = []    # repro: guarded-by=lock
+
+    def work(self, y):
+        with self.lock:
+            y.block_until_ready()
+""")
+    assert rules(fs) == ["lock-dispatch"]
+
+
+def test_kernels_run_under_lock_flagged():
+    fs = lint("""
+import threading
+
+class S:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.out = []    # repro: guarded-by=lock
+
+def work(state, kernels, task, ops):
+    with state.lock:
+        state.out.append(kernels.run(task, ops))
+""")
+    assert rules(fs) == ["lock-dispatch"]
+
+
+def test_dispatch_outside_lock_clean():
+    assert lint("""
+import threading
+import jax.numpy as jnp
+
+class S:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.out = []    # repro: guarded-by=lock
+
+    def work(self, x):
+        y = jnp.tril(x)
+        with self.lock:
+            self.out.append(y)
+""") == []
+
+
+def test_dispatch_under_unregistered_lock_clean():
+    """Only locks named by the guarded-by registry serialize the pool."""
+    assert lint("""
+import threading
+import jax.numpy as jnp
+
+other = threading.Lock()
+
+def work(x):
+    with other:
+        return jnp.tril(x)
+""") == []
+
+
+# ---- the repo itself ------------------------------------------------------
+
+def test_repo_sources_clean():
+    assert lockguard_files(SRC_ROOT) == []
+
+
+def test_registered_files_have_annotations():
+    for rel in LOCKGUARD_FILES:
+        src = (SRC_ROOT.parent / rel).read_text()
+        assert guarded_registry(src), f"{rel} lost its guarded-by registry"
+
+
+def test_missing_registered_file_is_a_finding(tmp_path):
+    fake_root = tmp_path / "repro"
+    fake_root.mkdir()
+    fs = lockguard_files(fake_root)
+    assert fs and all(f.rule == "guarded-by" for f in fs)
+    assert "missing" in fs[0].message
+
+
+def test_mutated_executor_caught():
+    """Remove one `with state.cond:` from the real executor source: the
+    mutations it guarded become findings."""
+    src = (SRC_ROOT / "sched" / "runtime.py").read_text()
+    needle = "with state.cond:"
+    assert needle in src, "executor no longer uses `with state.cond:`"
+    lines = src.splitlines(keepends=True)
+    hit = next(i for i, ln in enumerate(lines) if needle in ln)
+    lines[hit] = lines[hit].replace(needle, "if True:")
+    mutant = "".join(lines)
+    fs = lockguard_source(mutant, "repro/sched/runtime.py")
+    assert fs, "removing a lock block produced no findings"
+    assert {f.rule for f in fs} <= set(LOCKGUARD_RULES)
+    assert any(f.rule == "guarded-by" for f in fs)
+
+
+def test_mutated_recorder_caught():
+    src = (SRC_ROOT / "obs" / "recorder.py").read_text()
+    needle = "with self._lock:"
+    # first occurrence in actual code, not the class docstring
+    at = src.index(needle, src.index("def _finish"))
+    mutant = src[:at] + "if True:" + src[at + len(needle):]
+    fs = lockguard_source(mutant, "repro/obs/recorder.py")
+    assert any(f.rule == "guarded-by" for f in fs)
+
+
+# ---- baseline integration -------------------------------------------------
+
+def test_lockguard_findings_flow_through_baseline(monkeypatch, capsys):
+    """An unbaselined lockguard finding fails `--check --concurrency-only`
+    via the shared lint gate (seeded by breaking a registered file)."""
+    from repro.analysis import cli
+
+    real = lockguard_files
+
+    def broken(root, files=LOCKGUARD_FILES):
+        from repro.analysis.lint import Finding
+        return real(root, files) + [Finding(
+            "guarded-by", "repro/sched/runtime.py", 1, "seeded", "x = 1")]
+
+    monkeypatch.setattr(
+        "repro.analysis.concurrency.lockguard.lockguard_files", broken)
+    rc = cli.run_lint(SRC_ROOT, concurrency=True)
+    assert rc == 1
+    assert "seeded" in capsys.readouterr().out

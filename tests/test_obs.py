@@ -427,3 +427,76 @@ def test_disabled_overhead_under_five_percent():
         f"disabled-mode telemetry too expensive: {per_call * 1e9:.0f} ns/call"
         f" x 1200 sites = {overhead * 1e3:.3f} ms vs factorization"
         f" {chol_s * 1e3:.1f} ms")
+
+
+# ---------------------------------------------------------------------------
+# high-contention stress (PR 10): the single-lock recorder loses nothing
+# ---------------------------------------------------------------------------
+
+def test_recorder_contention_no_lost_updates():
+    """N raw threads hammering ONE counter + ONE histogram: every
+    increment and observation lands; bucket sums match the total count."""
+    rec = obs.Recorder()
+    n_threads, per_thread = 8, 500
+    barrier = threading.Barrier(n_threads)
+
+    def hammer(t):
+        barrier.wait()          # maximize overlap
+        for i in range(per_thread):
+            rec.inc("hits")
+            rec.observe("lat", (t * per_thread + i) % 7 * 1e-4)
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+
+    total = n_threads * per_thread
+    snap = rec.snapshot()
+    assert snap["counters"]["hits"] == total
+    h = rec.histograms["lat"]
+    assert h.count == total
+    assert sum(h.counts) == total                   # bucket partition
+    assert h.bucket_rows()[-1] == (float("inf"), total)  # cumulative top
+    assert h.min >= 0.0 and h.max <= 6.1e-4
+
+
+def test_recorder_contention_spans_and_mixed_ops():
+    """Concurrent spans + counters + gauges: span list complete, nesting
+    depths consistent, histogram auto-created by span finish is exact."""
+    rec = obs.Recorder()
+    n_threads, per_thread = 6, 120
+    barrier = threading.Barrier(n_threads)
+
+    def hammer(t):
+        barrier.wait()
+        for i in range(per_thread):
+            with rec.span("outer", t=t):
+                with rec.span("inner"):
+                    rec.inc("ops")
+            rec.gauge(f"g{t}", float(i))
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+
+    total = n_threads * per_thread
+    snap = rec.snapshot()
+    assert snap["counters"]["ops"] == total
+    assert len(snap["spans"]) == 2 * total
+    by_name = {}
+    for s in snap["spans"]:
+        by_name.setdefault(s.name, []).append(s)
+    assert len(by_name["outer"]) == total
+    assert len(by_name["inner"]) == total
+    assert all(s.depth == 0 for s in by_name["outer"])
+    assert all(s.depth == 1 for s in by_name["inner"])
+    assert rec.histograms["outer"].count == total
+    assert rec.histograms["inner"].count == total
+    assert snap["gauges"] == {f"g{t}": float(per_thread - 1)
+                              for t in range(n_threads)}

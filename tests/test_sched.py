@@ -313,3 +313,55 @@ def test_cli_main_smoke(tmp_path, capsys):
     assert rc == 0
     out = capsys.readouterr().out
     assert "makespan" in out and path.exists()
+
+
+# ---------------------------------------------------------------------------
+# worker names (PR 10): events, trace metadata, named-tid validation
+# ---------------------------------------------------------------------------
+
+def test_sim_events_carry_worker_names():
+    rep = simulate_dag("tile", 6, POLICIES["mixed"],
+                       SchedConfig(backend="sim", workers=3))
+    assert all(ev.worker_name == f"sim-w{ev.worker}" for ev in rep.events)
+
+
+def test_trace_names_workers_in_metadata_and_args():
+    rep = simulate_dag("tile", 6, POLICIES["mixed"],
+                       SchedConfig(backend="sim", workers=3))
+    trace = chrome_trace(rep)
+    meta = {e["tid"]: e["args"]["name"] for e in trace["traceEvents"]
+            if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert meta == {w: f"sim-w{w}" for w in range(3)}
+    xs = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    assert all(e["args"]["worker"] == f"sim-w{e['tid']}" for e in xs)
+
+
+def test_trace_carries_graph_identity():
+    """otherData names (p, policy): the HB verifier rebuilds the DAG from
+    the artifact alone."""
+    rep = simulate_dag("tile", 6, POLICIES["three_tier"],
+                       SchedConfig(backend="sim", workers=2))
+    other = chrome_trace(rep)["otherData"]
+    assert other["p"] == 6
+    assert other["policy"] == {"mode": "three_tier", "diag_thick": 1,
+                               "diag_thick2": 3}
+
+
+def test_validate_trace_accepts_named_tids():
+    rep = simulate_dag("tile", 4, POLICIES["mixed"],
+                       SchedConfig(backend="sim", workers=2))
+    trace = chrome_trace(rep)
+    for ev in trace["traceEvents"]:
+        if ev["ph"] == "X":
+            ev["tid"] = f"sched-w{ev['tid']}"
+    validate_trace(trace)
+
+
+def test_validate_trace_rejects_non_int_non_str_tids():
+    rep = simulate_dag("tile", 4, POLICIES["mixed"],
+                       SchedConfig(backend="sim", workers=2))
+    for bad in (1.5, None, True):
+        trace = chrome_trace(rep)
+        next(e for e in trace["traceEvents"] if e["ph"] == "X")["tid"] = bad
+        with pytest.raises(ValueError, match="tid"):
+            validate_trace(trace)
